@@ -1,0 +1,118 @@
+"""Shared miniature-scale setup for the paper-table benchmarks.
+
+The paper trains 150M-param paths for 88k steps on C4; this CPU
+container runs the same *system* at miniature scale (2-layer d=128
+paths, synthetic multi-domain corpus) so every table's comparison
+structure is reproduced with honest wall-clock.  Scale factors are
+recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.dipaco import DiPaCoTrainer
+from repro.core.routing import (kmeans_fit, prefix_features,
+                                train_discriminative_router)
+from repro.core.routing.kmeans import kmeans_assign, topn_assign
+from repro.data import SyntheticCorpus, shard_documents
+from repro.models import api
+from repro.models.config import DiPaCoConfig
+
+VOCAB = 512
+SEQ = 64
+NUM_DOMAINS = 8
+PREFIX = 8
+
+
+@functools.lru_cache(maxsize=1)
+def setup(quick: bool = True):
+    cfg = get_smoke_config("dipaco-150m").replace(route_prefix_len=PREFIX)
+    corpus = SyntheticCorpus(vocab_size=VOCAB, num_domains=NUM_DOMAINS,
+                             seq_len=SEQ, seed=0)
+    n_train = 1024 if quick else 4096
+    docs, doms = corpus.sample_documents(n_train, return_domains=True)
+    val, val_doms = corpus.sample_documents(256, seed=99,
+                                            return_domains=True)
+    router_docs, router_doms = corpus.sample_documents(
+        256, seed=7, return_domains=True)  # the paper's "router data"
+    key = jax.random.PRNGKey(0)
+    base, axes = api.init_model(key, cfg)
+    # pretrain the base LM briefly (paper: 24k-step 150M pretrain, Fig. 8)
+    base = pretrain(cfg, base, docs, steps=60 if quick else 300)
+    return dict(cfg=cfg, corpus=corpus, docs=docs, doms=doms, val=val,
+                val_doms=val_doms, router_docs=router_docs,
+                router_doms=router_doms, base=base, key=key)
+
+
+def pretrain(cfg, params, docs, *, steps: int, batch_size: int = 16,
+             lr: float = 3e-3):
+    from repro.optim import adamw_init, adamw_update
+
+    opt = adamw_init(params)
+    rng = np.random.default_rng(0)
+
+    @jax.jit
+    def step(p, o, batch, lr_):
+        (loss, _), g = jax.value_and_grad(api.forward_loss, has_aux=True)(
+            p, cfg, {"tokens": batch})
+        p, o = adamw_update(g, o, p, lr=lr_)
+        return p, o, loss
+
+    for t in range(steps):
+        idx = rng.integers(0, len(docs), size=batch_size)
+        params, opt, loss = step(params, opt, jnp.asarray(docs[idx]),
+                                 lr * min(1.0, (t + 1) / 20))
+    return params
+
+
+def make_shards(s, k, *, method="kmeans", overlap_topn=1, paths=None):
+    """Route + pre-shard the training docs with the requested method."""
+    cfg, base, docs = s["cfg"], s["base"], s["docs"]
+    feats = prefix_features(base, cfg, jnp.asarray(docs), prefix_len=PREFIX)
+    if method == "oracle":
+        assign = s["doms"] % k
+        cents = None
+    elif method == "kmeans":
+        cents, assign, _ = kmeans_fit(jax.random.PRNGKey(1), feats, k)
+        if overlap_topn > 1:
+            assign = np.asarray(topn_assign(feats, cents, overlap_topn))
+    elif method == "product_kmeans":
+        from repro.core.routing import (product_kmeans_assign,
+                                        product_kmeans_fit)
+        import math
+        kk = int(math.isqrt(k))
+        assert kk * kk == k
+        cents, assign = product_kmeans_fit(jax.random.PRNGKey(1), feats, kk)
+    else:
+        raise ValueError(method)
+    ds = shard_documents(docs, np.asarray(assign), k, holdout_frac=0.05)
+    return ds, cents, feats
+
+
+def route_eval_docs(s, cents, k):
+    cfg, base = s["cfg"], s["base"]
+    feats = prefix_features(base, cfg, jnp.asarray(s["val"]),
+                            prefix_len=PREFIX)
+    if cents is None:
+        return s["val_doms"] % k
+    a, _ = kmeans_assign(feats, cents)
+    return np.asarray(a)
+
+
+def train_trainer(trainer: DiPaCoTrainer, phases: int):
+    t0 = time.time()
+    hist = []
+    for _ in range(phases):
+        m = trainer.run_phase()
+        hist.append(m.mean_loss)
+    return hist, time.time() - t0
+
+
+def ppl(nll: float) -> float:
+    return float(np.exp(nll))

@@ -1,0 +1,70 @@
+"""Paper Fig. 11 (appendix §7.2.1): more alternating discriminative
+re-sharding (EM) phases improve PPL with diminishing returns.
+
+As in the paper's Fig. 10 "branching" protocol, training CONTINUES from
+the previous round's paths after each re-shard (coordinate descent:
+update paths, then update assignments)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.dipaco import DiPaCoTrainer, flat_moe_config
+from repro.core.routing import (prefix_features,
+                                train_discriminative_router)
+from repro.core.routing.discriminative import score_documents
+from repro.data import shard_documents
+from repro.data.loader import ShardLoader
+from . import common
+
+
+def run(quick: bool = True):
+    s = common.setup(quick)
+    cfg, base, key = s["cfg"], s["base"], s["key"]
+    phases_per_em, tau = (2, 10) if quick else (3, 25)
+    P = 4
+    em_rounds = 3 if quick else 4
+    rows = []
+    ds, cents, feats = common.make_shards(s, P, method="kmeans")
+    ev = common.route_eval_docs(s, cents, P)
+    tr = DiPaCoTrainer(cfg, flat_moe_config(P, inner_steps=tau), ds,
+                       key=key, base_params=base, batch_size=8,
+                       peak_lr=2e-3, warmup=10,
+                       total_steps=em_rounds * phases_per_em * tau)
+    router = None
+    for em in range(em_rounds):
+        for _ in range(phases_per_em):
+            tr.run_phase(tau)
+        if router is not None:
+            vfeats = prefix_features(base, cfg,
+                                     jax.numpy.asarray(s["val"]),
+                                     prefix_len=common.PREFIX)
+            ev = np.asarray(router.assign(vfeats))
+        res = tr.evaluate_routed(s["val"], ev)
+        rows.append({"name": f"alternating_em_phase{em}",
+                     "val_ppl": res["ppl"], "us_per_call": 0.0})
+        if em == em_rounds - 1:
+            break
+        # E-step: discriminative re-shard; M-step continues in-place
+        paths = [tr.path_params(p) for p in range(P)]
+        rdocs = jax.numpy.asarray(s["router_docs"])
+        scores = score_documents(paths, cfg, rdocs)
+        rfeats = prefix_features(base, cfg, rdocs,
+                                 prefix_len=common.PREFIX)
+        router = train_discriminative_router(
+            jax.random.PRNGKey(10 + em), rfeats,
+            np.asarray(scores.argmax(axis=1)), P, steps=200)
+        tfeats = prefix_features(base, cfg, jax.numpy.asarray(s["docs"]),
+                                 prefix_len=common.PREFIX)
+        new_ds = shard_documents(s["docs"],
+                                 np.asarray(router.assign(tfeats)), P,
+                                 holdout_frac=0.05)
+        tr.dataset = new_ds
+        tr.loaders = [ShardLoader(sh, 8, seed=500 + em * 17 + i)
+                      for i, sh in enumerate(new_ds.shards)]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,75 @@
+"""Paper Fig. 8: convergence of DiPaCo (from a pretrained base) vs the
+dense baseline and a larger dense model (miniature proxy: 2x width)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dipaco import DiPaCoTrainer
+from repro.data import shard_documents
+from repro.models import api
+from repro.models.config import DiPaCoConfig
+from . import common
+
+
+def run(quick: bool = True):
+    import jax
+    s = common.setup(quick)
+    cfg, base, key = s["cfg"], s["base"], s["key"]
+    phases, tau = (4, 10) if quick else (10, 25)
+    rows = []
+
+    ds, cents, _ = common.make_shards(s, 4)
+    ev = common.route_eval_docs(s, cents, 4)
+    tr = DiPaCoTrainer(cfg, DiPaCoConfig(levels=(2, 2), inner_steps=tau),
+                       ds, key=key, base_params=base, batch_size=8,
+                       peak_lr=2e-3, warmup=10,
+                       total_steps=phases * tau * 4)
+    curve = []
+    for ph in range(phases):
+        tr.run_phase(tau)
+        curve.append(tr.evaluate_routed(s["val"], ev)["ppl"])
+    rows.append({"name": "dipaco_2x2_curve",
+                 "val_ppl": curve[-1],
+                 "curve": [round(c, 3) for c in curve],
+                 "us_per_call": 0.0})
+
+    # dense baseline of path size, same steps, from the same base
+    ds1 = shard_documents(s["docs"], np.zeros(len(s["docs"]), np.int32), 1)
+    tr1 = DiPaCoTrainer(cfg, DiPaCoConfig(levels=(1,), inner_steps=tau),
+                        ds1, key=key, base_params=base, batch_size=8,
+                        peak_lr=2e-3, warmup=10,
+                        total_steps=phases * tau * 4)
+    curve1 = []
+    for ph in range(phases):
+        tr1.run_phase(tau)
+        curve1.append(tr1.evaluate_routed(
+            s["val"], np.zeros(len(s["val"]), np.int32))["ppl"])
+    rows.append({"name": "dense_path_size_curve", "val_ppl": curve1[-1],
+                 "curve": [round(c, 3) for c in curve1],
+                 "us_per_call": 0.0})
+
+    # larger dense model (2x d_model — the paper's 1.3B analogue)
+    big = cfg.replace(d_model=cfg.d_model * 2, num_heads=cfg.num_heads * 2,
+                      d_ff=cfg.d_ff * 2)
+    kb = jax.random.PRNGKey(5)
+    big_base, _ = api.init_model(kb, big)
+    big_base = common.pretrain(big, big_base, s["docs"],
+                               steps=60 if quick else 300)
+    trb = DiPaCoTrainer(big, DiPaCoConfig(levels=(1,), inner_steps=tau),
+                        ds1, key=kb, base_params=big_base, batch_size=8,
+                        peak_lr=2e-3, warmup=10,
+                        total_steps=phases * tau * 4)
+    curveb = []
+    for ph in range(phases):
+        trb.run_phase(tau)
+        curveb.append(trb.evaluate_routed(
+            s["val"], np.zeros(len(s["val"]), np.int32))["ppl"])
+    rows.append({"name": "dense_2x_curve", "val_ppl": curveb[-1],
+                 "curve": [round(c, 3) for c in curveb],
+                 "us_per_call": 0.0})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

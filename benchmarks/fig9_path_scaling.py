@@ -1,0 +1,38 @@
+"""Paper Fig. 9: validation PPL improves with more paths (and with
+path-specific modules) at constant path size."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dipaco import DiPaCoTrainer
+from repro.models.config import DiPaCoConfig
+from . import common
+
+
+def run(quick: bool = True):
+    s = common.setup(quick)
+    cfg, base, key = s["cfg"], s["base"], s["key"]
+    phases, tau = (3, 10) if quick else (6, 25)
+    rows = []
+    grids = [(1, 2), (2, 2), (2, 4)] if quick else \
+        [(1, 2), (2, 2), (2, 4), (4, 4)]
+    for levels in grids:
+        P = levels[0] * levels[1]
+        ds, cents, _ = common.make_shards(s, P)
+        ev = common.route_eval_docs(s, cents, P)
+        tr = DiPaCoTrainer(cfg, DiPaCoConfig(levels=levels,
+                                             inner_steps=tau), ds,
+                           key=key, base_params=base, batch_size=8,
+                           peak_lr=2e-3, warmup=10,
+                           total_steps=phases * tau * 4)
+        for _ in range(phases):
+            tr.run_phase(tau)
+        res = tr.evaluate_routed(s["val"], ev)
+        rows.append({"name": f"dipaco_{levels[0]}x{levels[1]}_P{P}",
+                     "val_ppl": res["ppl"], "us_per_call": 0.0})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,72 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (scaffold contract).  ``derived``
+packs the benchmark-specific result (PPL, ratios, notes) as
+``k=v|k=v``.  ``--full`` runs the longer (non-quick) configurations.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _derived(row: dict) -> str:
+    skip = {"name", "us_per_call"}
+    parts = []
+    for k, v in row.items():
+        if k in skip:
+            continue
+        if isinstance(v, float):
+            v = f"{v:.6g}"
+        parts.append(f"{k}={v}")
+    return "|".join(parts)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark module names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (fig8_convergence, fig9_path_scaling, fig11_alternating,
+                   kernels_micro, outer_exec_scaling, roofline,
+                   sync_vs_diloco, table1_variants,
+                   table2_flatmoe_overfit, table3_eval_routing,
+                   table5_sharding)
+    suites = {
+        "table1": table1_variants,
+        "table2": table2_flatmoe_overfit,
+        "table3": table3_eval_routing,
+        "table5": table5_sharding,
+        "fig8": fig8_convergence,
+        "fig9": fig9_path_scaling,
+        "fig11": fig11_alternating,
+        "sync_vs_diloco": sync_vs_diloco,
+        "outer_exec": outer_exec_scaling,
+        "kernels": kernels_micro,
+        "roofline": roofline,
+    }
+    if args.only:
+        names = args.only.split(",")
+        suites = {k: v for k, v in suites.items() if k in names}
+
+    print("name,us_per_call,derived")
+    for name, mod in suites.items():
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=quick)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}_FAILED,0,error={type(e).__name__}: {e}")
+            continue
+        for r in rows:
+            print(f"{r['name']},{r.get('us_per_call', 0.0):.1f},"
+                  f"{_derived(r)}")
+        print(f"# {name} finished in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

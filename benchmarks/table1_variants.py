@@ -1,0 +1,63 @@
+"""Paper Table 1: Baseline vs DiLoCo vs Flat MoE vs DiPaCo (+path-
+specific modules) at equal weight-update steps (miniature scale)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.dipaco import (DiPaCoTrainer, diloco_config,
+                               flat_moe_config)
+from repro.data import shard_documents
+from repro.models.config import DiPaCoConfig
+from . import common
+
+
+def run(quick: bool = True):
+    s = common.setup(quick)
+    cfg, base, key = s["cfg"], s["base"], s["key"]
+    phases, tau = (3, 10) if quick else (8, 25)
+    rows = []
+
+    def bench(name, dcfg, ds, eval_assign, total_params_factor):
+        t0 = time.time()
+        tr = DiPaCoTrainer(cfg, dcfg, ds, key=key, base_params=base,
+                           batch_size=8, peak_lr=2e-3, warmup=10,
+                           total_steps=phases * tau * 4)
+        for _ in range(phases):
+            tr.run_phase(tau)
+        res = tr.evaluate_routed(s["val"], eval_assign)
+        dt = time.time() - t0
+        rows.append({
+            "name": name, "val_ppl": res["ppl"], "val_nll": res["nll"],
+            "params_factor": total_params_factor,
+            "us_per_call": dt / (phases * tau) * 1e6, "wall_s": dt})
+        return res
+
+    # Baseline: single path, same steps, all data
+    ds1 = shard_documents(s["docs"], np.zeros(len(s["docs"]), np.int32), 1)
+    bench("baseline_1path", DiPaCoConfig(levels=(1,), inner_steps=tau),
+          ds1, np.zeros(len(s["val"]), np.int32), 1.0)
+
+    # DiLoCo P=4: one module, 4 workers, 4x data
+    ds4u = shard_documents(s["docs"], np.arange(len(s["docs"])) % 4, 4)
+    bench("diloco_P4", diloco_config(4, inner_steps=tau), ds4u,
+          np.zeros(len(s["val"]), np.int32), 1.0)
+
+    # routed variants share a k-means sharding
+    ds4, cents, _ = common.make_shards(s, 4, method="kmeans")
+    ev4 = common.route_eval_docs(s, cents, 4)
+    bench("flat_moe_P4", flat_moe_config(4, inner_steps=tau), ds4, ev4, 4.0)
+    bench("dipaco_2x2", DiPaCoConfig(levels=(2, 2), inner_steps=tau),
+          ds4, ev4, 2.0)
+    bench("dipaco_2x2_pathspec",
+          DiPaCoConfig(levels=(2, 2), inner_steps=tau,
+                       path_specific_levels=(1,)),
+          ds4, ev4, 2.0 + 1.0)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,59 @@
+"""Paper Table 3: routing more frequently at eval time (+early
+stopping) closes the gap to the bigger dense model."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.dipaco import DiPaCoTrainer
+from repro.core.routing import (prefix_features,
+                                train_discriminative_router)
+from repro.core.routing.frequent import evaluate_rerouted
+from repro.models.config import DiPaCoConfig
+from . import common
+
+
+def run(quick: bool = True):
+    s = common.setup(quick)
+    cfg, base, key = s["cfg"], s["base"], s["key"]
+    phases, tau = (4, 10) if quick else (8, 25)
+    P = 4
+    ds, cents, feats = common.make_shards(s, P, method="kmeans")
+    tr = DiPaCoTrainer(cfg, DiPaCoConfig(levels=(2, 2), inner_steps=tau,
+                                         early_stopping=True), ds,
+                       key=key, base_params=base, batch_size=8,
+                       peak_lr=2e-3, warmup=10,
+                       total_steps=phases * tau * 4)
+    for _ in range(phases):
+        tr.run_phase(tau)
+    paths = [tr.path_params(p) for p in range(P)]
+    paths_best = [tr.path_params(p, best=True) for p in range(P)]
+    # discriminative router trained on router-data path scores (§7.2.1)
+    from repro.core.routing.discriminative import score_documents
+    rdocs = jax.numpy.asarray(s["router_docs"])
+    scores = score_documents(paths, cfg, rdocs)
+    targets = np.asarray(scores.argmax(axis=1))
+    rfeats = prefix_features(base, cfg, rdocs, prefix_len=common.PREFIX)
+    router = train_discriminative_router(jax.random.PRNGKey(2), rfeats,
+                                         targets, P, steps=300)
+    rows = []
+    val = jax.numpy.asarray(s["val"])
+    for early, label, plist in [(False, "no_es", paths),
+                                (True, "es", paths_best)]:
+        res = evaluate_rerouted(plist, cfg, router, base, val,
+                                every=10_000)   # once per sequence
+        rows.append({"name": f"route_once_{label}", "val_ppl": res["ppl"],
+                     "switch_rate": 0.0, "us_per_call": 0.0})
+    for every in ([16, 8] if quick else [32, 16, 8, 4]):
+        res = evaluate_rerouted(paths_best, cfg, router, base, val,
+                                every=every)
+        rows.append({"name": f"route_every_{every}_es",
+                     "val_ppl": res["ppl"],
+                     "switch_rate": res["switch_rate"],
+                     "us_per_call": 0.0})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

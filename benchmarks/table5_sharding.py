@@ -1,0 +1,68 @@
+"""Paper Table 5 (+§7.2.1): sharding method impact — k-means vs product
+k-means vs discriminative (one alternating EM phase)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.dipaco import DiPaCoTrainer
+from repro.core.routing import (prefix_features,
+                                train_discriminative_router)
+from repro.core.routing.discriminative import score_documents
+from repro.data import shard_documents
+from repro.models.config import DiPaCoConfig
+from . import common
+
+
+def run(quick: bool = True):
+    s = common.setup(quick)
+    cfg, base, key = s["cfg"], s["base"], s["key"]
+    phases, tau = (3, 10) if quick else (6, 25)
+    P = 4
+    rows = []
+
+    def train_on(ds, ev, name):
+        tr = DiPaCoTrainer(cfg, DiPaCoConfig(levels=(2, 2),
+                                             inner_steps=tau), ds,
+                           key=key, base_params=base, batch_size=8,
+                           peak_lr=2e-3, warmup=10,
+                           total_steps=phases * tau * 4)
+        for _ in range(phases):
+            tr.run_phase(tau)
+        res = tr.evaluate_routed(s["val"], ev)
+        rows.append({"name": name, "val_ppl": res["ppl"],
+                     "us_per_call": 0.0})
+        return tr
+
+    ds, cents, feats = common.make_shards(s, P, method="kmeans")
+    ev = common.route_eval_docs(s, cents, P)
+    tr_km = train_on(ds, ev, "kmeans")
+
+    ds_pk, cents_pk, _ = common.make_shards(s, P, method="product_kmeans")
+    from repro.core.routing import product_kmeans_assign
+    vfeats = prefix_features(base, cfg, jax.numpy.asarray(s["val"]),
+                             prefix_len=common.PREFIX)
+    ev_pk = np.asarray(product_kmeans_assign(vfeats, cents_pk))
+    train_on(ds_pk, ev_pk, "product_kmeans")
+
+    # discriminative: one EM phase — score router-data with the k-means-
+    # trained paths, fit the logistic router, re-shard, re-train
+    paths = [tr_km.path_params(p) for p in range(P)]
+    rdocs = jax.numpy.asarray(s["router_docs"])
+    scores = score_documents(paths, cfg, rdocs)
+    targets = np.asarray(scores.argmax(axis=1))
+    rfeats = prefix_features(base, cfg, rdocs, prefix_len=common.PREFIX)
+    router = train_discriminative_router(jax.random.PRNGKey(2), rfeats,
+                                         targets, P, steps=300)
+    tfeats = prefix_features(base, cfg, jax.numpy.asarray(s["docs"]),
+                             prefix_len=common.PREFIX)
+    new_assign = np.asarray(router.assign(tfeats))
+    ds_d = shard_documents(s["docs"], new_assign, P, holdout_frac=0.05)
+    ev_d = np.asarray(router.assign(vfeats))
+    train_on(ds_d, ev_d, "discriminative")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,59 @@
+"""Quickstart: train a 2x2 DiPaCo on a synthetic multi-domain corpus.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the whole pipeline: corpus -> prefix features -> k-means coarse
+routing -> offline pre-sharding -> DiLoCo-per-module training ->
+routed evaluation.  ~2 minutes on CPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.dipaco import DiPaCoTrainer
+from repro.core.routing import kmeans_fit, prefix_features
+from repro.core.routing.kmeans import kmeans_assign
+from repro.data import SyntheticCorpus, shard_documents
+from repro.models import api
+from repro.models.config import DiPaCoConfig
+
+
+def main():
+    cfg = get_smoke_config("dipaco-150m").replace(route_prefix_len=8)
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, num_domains=4,
+                             seq_len=64, seed=0)
+    docs, _ = corpus.sample_documents(1024, return_domains=True)
+    val, _ = corpus.sample_documents(128, seed=99, return_domains=True)
+
+    key = jax.random.PRNGKey(0)
+    base, _ = api.init_model(key, cfg)
+
+    print("== 1. coarse routing (paper §2.4): k-means on prefix features")
+    feats = prefix_features(base, cfg, jnp.asarray(docs))
+    cents, assign, inertia = kmeans_fit(jax.random.PRNGKey(1), feats, 4)
+    print(f"   shard sizes: {np.bincount(np.asarray(assign), minlength=4)}")
+
+    print("== 2. offline pre-sharding (one shard per path)")
+    ds = shard_documents(docs, np.asarray(assign), 4, holdout_frac=0.05)
+
+    print("== 3. DiPaCo 2x2 training (Algorithm 1, tau=20)")
+    dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=20)
+    tr = DiPaCoTrainer(cfg, dcfg, ds, key=key, base_params=base,
+                       batch_size=8, peak_lr=3e-3, warmup=10,
+                       total_steps=400)
+    for ph in range(4):
+        m = tr.run_phase()
+        print(f"   phase {ph}: mean loss {m.mean_loss:.3f} "
+              f"(outer sync: 1 communication round)")
+
+    print("== 4. routed evaluation (route once per sequence)")
+    vfeats = prefix_features(base, cfg, jnp.asarray(val))
+    va, _ = kmeans_assign(vfeats, cents)
+    res = tr.evaluate_routed(val, np.asarray(va))
+    print(f"   validation PPL: {res['ppl']:.2f} "
+          f"(oracle entropy PPL: {np.exp(corpus.oracle_nll()):.2f})")
+
+
+if __name__ == "__main__":
+    main()

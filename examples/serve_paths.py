@@ -1,0 +1,62 @@
+"""Serve trained paths with batched requests and eval-time re-routing
+(paper §2.4.3 / Fig. 3).
+
+    PYTHONPATH=src python examples/serve_paths.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.dipaco import DiPaCoTrainer
+from repro.core.routing import (kmeans_fit, prefix_features,
+                                train_discriminative_router)
+from repro.data import SyntheticCorpus, shard_documents
+from repro.models import api
+from repro.models.config import DiPaCoConfig
+from repro.serving import PathServingEngine
+
+
+def main():
+    cfg = get_smoke_config("dipaco-150m").replace(route_prefix_len=8)
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, num_domains=4,
+                             seq_len=64, seed=0)
+    docs, doms = corpus.sample_documents(1024, return_domains=True)
+    key = jax.random.PRNGKey(0)
+    base, _ = api.init_model(key, cfg)
+
+    print("== train 4 paths quickly (oracle domain shards)")
+    ds = shard_documents(docs, doms % 4, 4)
+    tr = DiPaCoTrainer(cfg, DiPaCoConfig(levels=(2, 2), inner_steps=20),
+                       ds, key=key, base_params=base, batch_size=8,
+                       peak_lr=3e-3, warmup=10, total_steps=200)
+    for _ in range(3):
+        tr.run_phase()
+    paths = [tr.path_params(p) for p in range(4)]
+
+    print("== fit a discriminative router on path scores (§2.4.2)")
+    from repro.core.routing.discriminative import score_documents
+    rdocs = corpus.sample_documents(128, seed=7)
+    scores = score_documents(paths, cfg, jnp.asarray(rdocs))
+    rfeats = prefix_features(base, cfg, jnp.asarray(rdocs))
+    router = train_discriminative_router(
+        jax.random.PRNGKey(2), rfeats,
+        np.asarray(scores.argmax(axis=1)), 4, steps=200)
+
+    print("== serve a batch of requests")
+    engine = PathServingEngine(cfg, paths, router=router,
+                               feat_params=base, cache_len=96)
+    prompts, pdoms = corpus.sample_documents(8, seed=123,
+                                             return_domains=True)
+    res = engine.generate(prompts[:, :16], max_new=16)
+    print(f"   routed to paths: {res.paths.tolist()} (domains "
+          f"{pdoms.tolist()})")
+    print(f"   first continuation: {res.tokens[0, 16:].tolist()}")
+
+    print("== re-route every 8 tokens during decode (§2.4.3)")
+    res2 = engine.generate(prompts[:, :16], max_new=16, reroute_every=8)
+    print(f"   path switches during generation: {res2.switches}")
+
+
+if __name__ == "__main__":
+    main()

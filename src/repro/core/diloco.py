@@ -1,0 +1,66 @@
+"""DiLoCo-per-module outer optimization (paper Algorithm 1, lines 11-16).
+
+Functional core shared by (a) the jitted multi-pod collective outer step
+(launch/steps.py) and (b) the infra simulation (infra/outer_executor.py).
+
+The *stacked-worker* formulation: every worker w holds its path's view of
+the module store.  The outer gradient of worker w's module at repeat r is
+the mixing-matrix-weighted average of deltas of all workers through that
+module; workers through the same module compute identical updates, so
+their copies stay synchronized without a central server.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as P
+from repro.optim.nesterov import nesterov_init, nesterov_update
+
+
+def _is_layer_leaf(axes_leaf, shape, num_repeats):
+    return (len(axes_leaf) >= 1 and axes_leaf[0] == P.LAYERS
+            and len(shape) >= 2 and shape[1] == num_repeats)
+
+
+def mix_deltas(deltas, axes, mix_layers, mix_shared):
+    """deltas: worker-stacked (W, ...) tree; returns mixed outer gradients."""
+    R = mix_layers.shape[0]
+
+    def mix_one(d, ax):
+        d32 = d.astype(jnp.float32)
+        if _is_layer_leaf(ax, d.shape, R):
+            return jnp.einsum("rwv,vr...->wr...", mix_layers, d32)
+        return jnp.einsum("wv,v...->w...", mix_shared, d32)
+
+    return P.tree_map_with_axes(mix_one, deltas, axes)
+
+
+def outer_gradients(worker_params, global_params, axes, mix_layers,
+                    mix_shared):
+    deltas = jax.tree_util.tree_map(
+        lambda g, w: g.astype(jnp.float32) - w.astype(jnp.float32),
+        global_params, worker_params)
+    return mix_deltas(deltas, axes, mix_layers, mix_shared)
+
+
+def outer_step(worker_params, global_params, outer_state, axes, mix_layers,
+               mix_shared, *, lr=0.7, momentum=0.9, nesterov=True):
+    """One outer optimization: returns (new_worker, new_global, new_state).
+
+    After this step each worker's params equal its path's view of the
+    updated module store (Algorithm 1 line 14 + redistribution).
+    """
+    og = outer_gradients(worker_params, global_params, axes, mix_layers,
+                         mix_shared)
+    new_global, new_state = nesterov_update(
+        og, outer_state, global_params, lr=lr, momentum=momentum,
+        nesterov=nesterov)
+    # redistribute: worker copies <- updated module store view
+    new_worker = jax.tree_util.tree_map(
+        lambda g, w: g.astype(w.dtype), new_global, worker_params)
+    return new_worker, new_global, new_state
+
+
+def outer_state_init(global_params):
+    return nesterov_init(global_params)

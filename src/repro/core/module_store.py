@@ -1,0 +1,155 @@
+"""Global module store: the 'large model' that is never materialized as
+one network — only as K_l module variants per level plus shared leaves.
+
+Layout: for each level l, a param tree whose layer-stacked leaves have
+shape (K_l, R_l, ...) — K_l module variants of the R_l repeat-groups in
+that level.  Non-layer leaves (embeddings, final norm, frontend
+projectors) live in ``shared`` — either one copy (shared_embeddings) or
+one per path.
+
+``assemble(path)`` produces a full path parameter tree; ``scatter_delta``
+routes a path's parameter delta back to its modules (used by the infra
+outer executors).
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import params as P
+from .partition import PathPartition
+
+
+def _is_layer_leaf(ax, shape, num_repeats):
+    return (len(ax) >= 1 and ax[0] == P.LAYERS and len(shape) >= 1
+            and shape[0] == num_repeats)
+
+
+class ModuleStore:
+    def __init__(self, template_params, axes, partition: PathPartition):
+        self.axes = axes
+        self.part = partition
+        R = partition.boundaries[-1]
+        self.num_repeats = R
+
+        def split_levels(leaf, ax):
+            if _is_layer_leaf(ax, leaf.shape, R):
+                return "layer"
+            return "shared"
+
+        self._kind = P.tree_map_with_axes(split_levels, template_params, axes)
+        # guards read-modify-write of level containers: concurrent outer
+        # executors updating different experts of the same level must not
+        # lose each other's writes
+        self._write_lock = threading.Lock()
+        # levels[l]: tree with leaves (K_l, R_l, ...) for layer leaves
+        self.levels = []
+        for l in range(partition.num_levels):
+            lo, hi = partition.boundaries[l], partition.boundaries[l + 1]
+            K = (partition.num_paths
+                 if l in partition.path_specific_levels else
+                 partition.levels[l])
+            K = int(max(partition.paths[:, l])) + 1
+
+            def take(leaf, kind):
+                if kind != "layer":
+                    return None
+                seg = leaf[lo:hi]
+                return jnp.broadcast_to(seg[None], (K, *seg.shape)).copy()
+
+            lvl = jax.tree_util.tree_map(take, template_params, self._kind)
+            self.levels.append(lvl)
+        if partition.shared_embeddings:
+            self.shared = jax.tree_util.tree_map(
+                lambda leaf, kind: leaf if kind == "shared" else None,
+                template_params, self._kind)
+        else:
+            Pn = partition.num_paths
+            self.shared = jax.tree_util.tree_map(
+                lambda leaf, kind: (jnp.broadcast_to(
+                    leaf[None], (Pn, *leaf.shape)).copy()
+                    if kind == "shared" else None),
+                template_params, self._kind)
+
+    # ------------------------------------------------------------------
+    def assemble(self, path_idx: int):
+        """Materialize the parameter tree for path ``path_idx``."""
+        segs = []
+        for l in range(self.part.num_levels):
+            e = self.part.module_of(path_idx, l)
+            segs.append(jax.tree_util.tree_map(
+                lambda x: None if x is None else x[e], self.levels[l]))
+
+        def combine(kind, *leaves):
+            shared_leaf, *level_leaves = leaves
+            if kind == "shared":
+                if self.part.shared_embeddings:
+                    return shared_leaf
+                return shared_leaf[path_idx]
+            return jnp.concatenate([x for x in level_leaves], axis=0)
+
+        # walk trees in parallel
+        def walk(kind_t, shared_t, *level_ts):
+            if isinstance(kind_t, dict):
+                return {k: walk(kind_t[k], shared_t[k],
+                                *[lt[k] for lt in level_ts])
+                        for k in kind_t}
+            return combine(kind_t, shared_t, *level_ts)
+
+        return walk(self._kind, self.shared, *segs)
+
+    # ------------------------------------------------------------------
+    def module_params(self, level: int, expert: int):
+        return jax.tree_util.tree_map(
+            lambda x: None if x is None else x[expert], self.levels[level])
+
+    def set_module(self, level: int, expert: int, new_tree):
+        def setter(store_leaf, new_leaf):
+            if store_leaf is None:
+                return None
+            return store_leaf.at[expert].set(new_leaf)
+
+        with self._write_lock:
+            self.levels[level] = jax.tree_util.tree_map(
+                setter, self.levels[level], new_tree)
+
+    def set_shared(self, new_tree, path_idx=None):
+        def setter(store_leaf, new_leaf, kind):
+            if kind != "shared":
+                return store_leaf
+            if self.part.shared_embeddings or path_idx is None:
+                return new_leaf
+            return store_leaf.at[path_idx].set(new_leaf)
+
+        with self._write_lock:
+            self.shared = _tree_map3(setter, self.shared, new_tree,
+                                     self._kind)
+
+    # ------------------------------------------------------------------
+    def slice_for_level(self, tree, level: int):
+        """Slice a full path tree's layer leaves to level ``level``."""
+        lo, hi = self.part.boundaries[level], self.part.boundaries[level + 1]
+        return jax.tree_util.tree_map(
+            lambda leaf, kind: leaf[lo:hi] if kind == "layer" else None,
+            tree, self._kind)
+
+    def shared_of(self, tree):
+        return jax.tree_util.tree_map(
+            lambda leaf, kind: leaf if kind == "shared" else None,
+            tree, self._kind)
+
+    def num_params(self) -> int:
+        n = 0
+        for lvl in self.levels:
+            n += sum(x.size for x in jax.tree_util.tree_leaves(lvl))
+        n += sum(x.size for x in jax.tree_util.tree_leaves(self.shared))
+        return n
+
+
+def _tree_map3(fn, a, b, c):
+    if isinstance(a, dict):
+        return {k: _tree_map3(fn, a[k], b[k], c[k]) for k in a}
+    return fn(a, b, c)

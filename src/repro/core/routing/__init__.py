@@ -1,0 +1,4 @@
+from .features import prefix_features
+from .kmeans import kmeans_fit, kmeans_assign, product_kmeans_fit, product_kmeans_assign
+from .discriminative import (score_documents, train_discriminative_router,
+                             DiscriminativeRouter)

@@ -1,0 +1,103 @@
+"""Discriminative routing (paper §2.4.2, §7.2.1).
+
+1. Score every router-data document with every path (summed
+   autoregressive log-likelihood S_ijp).
+2. Targets = argmax_p sum_j S_ijp.
+3. Train a K-class linear logistic classifier on g(document).
+4. Calibrate a bias term so the predicted document->path distribution
+   matches the target distribution (the paper's remedy for starved
+   paths).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.lm import apply_lm, lm_loss
+
+
+def score_documents(path_params_list, cfg: ModelConfig, tokens,
+                    batch_size: int = 32):
+    """S[i, p] = summed log-likelihood of doc i under path p
+    (excluding the routing prefix)."""
+    @jax.jit
+    def score(params, tk):
+        logits, _ = apply_lm(params, cfg, tk)
+        nll, mask = lm_loss(logits, tk, cfg.route_prefix_len)
+        return -nll.sum(axis=-1)
+
+    cols = []
+    for params in path_params_list:
+        outs = []
+        for i in range(0, tokens.shape[0], batch_size):
+            outs.append(score(params, tokens[i:i + batch_size]))
+        cols.append(jnp.concatenate(outs))
+    return jnp.stack(cols, axis=1)  # (N, P)
+
+
+@dataclass
+class DiscriminativeRouter:
+    w: jnp.ndarray       # (D, P)
+    b: jnp.ndarray       # (P,)
+    mu: jnp.ndarray      # (D,) feature normalization
+    sigma: jnp.ndarray   # (D,)
+
+    def logits(self, z):
+        zn = (jnp.asarray(z, jnp.float32) - self.mu) / self.sigma
+        return zn @ self.w + self.b
+
+    def assign(self, z):
+        return jnp.argmax(self.logits(z), axis=-1)
+
+    def assign_topn(self, z, n: int):
+        _, idx = jax.lax.top_k(self.logits(z), n)
+        return idx
+
+
+def train_discriminative_router(key, feats, targets, num_paths: int, *,
+                                steps: int = 500, lr: float = 0.1,
+                                weight_decay: float = 1e-4,
+                                target_dist=None,
+                                calibrate: bool = True) -> DiscriminativeRouter:
+    """K-class linear logistic regression + bias calibration."""
+    z0 = jnp.asarray(feats, jnp.float32)
+    mu = z0.mean(0)
+    sigma = jnp.maximum(z0.std(0), 1e-6)
+    z = (z0 - mu) / sigma
+    y = jnp.asarray(targets)
+    d = z.shape[-1]
+    w = jax.random.normal(key, (d, num_paths)) * 0.01
+    b = jnp.zeros((num_paths,))
+
+    def loss_fn(wb):
+        w_, b_ = wb
+        logits = z @ w_ + b_
+        ll = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(ll, y[:, None], 1).mean()
+        return nll + weight_decay * jnp.sum(w_ * w_)
+
+    @jax.jit
+    def step(wb, _):
+        g = jax.grad(loss_fn)(wb)
+        return (wb[0] - lr * g[0], wb[1] - lr * g[1]), None
+
+    (w, b), _ = jax.lax.scan(step, (w, b), None, length=steps)
+
+    if calibrate:
+        # match predicted shard distribution to target (paper §7.2.1)
+        if target_dist is None:
+            target_dist = jnp.bincount(y, length=num_paths).astype(
+                jnp.float32)
+            target_dist = target_dist / target_dist.sum()
+        target_dist = jnp.maximum(jnp.asarray(target_dist), 1e-6)
+        for _ in range(30):
+            pred = jnp.argmax(z @ w + b, axis=-1)
+            frac = jnp.bincount(pred, length=num_paths).astype(
+                jnp.float32) / pred.shape[0]
+            b = b + 0.5 * (jnp.log(target_dist)
+                           - jnp.log(jnp.maximum(frac, 1e-6)))
+    return DiscriminativeRouter(w=w, b=b, mu=mu, sigma=sigma)

@@ -1,0 +1,77 @@
+"""Generative routing (paper §2.4.1, Eq. 1) — k-means and product
+k-means (§7.3) on prefix features."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _plusplus_init(key, z, k):
+    """k-means++ seeding."""
+    n = z.shape[0]
+    idx0 = jax.random.randint(key, (), 0, n)
+    centers = [z[idx0]]
+    d2 = jnp.sum((z - centers[0]) ** 2, axis=-1)
+    for i in range(1, k):
+        key, sub = jax.random.split(key)
+        probs = d2 / jnp.maximum(d2.sum(), 1e-9)
+        idx = jax.random.choice(sub, n, p=probs)
+        c = z[idx]
+        centers.append(c)
+        d2 = jnp.minimum(d2, jnp.sum((z - c) ** 2, axis=-1))
+    return jnp.stack(centers)
+
+
+def kmeans_assign(z, centroids):
+    """Eq. 1: r(z) = argmin_i ||z - c_i||^2.  z: (N,D), c: (K,D) -> (N,)."""
+    d2 = (jnp.sum(z * z, -1, keepdims=True)
+          - 2 * z @ centroids.T
+          + jnp.sum(centroids * centroids, -1)[None, :])
+    return jnp.argmin(d2, axis=-1), d2
+
+
+def kmeans_fit(key, z, k, iters: int = 25):
+    """Lloyd iterations; returns (centroids (K,D), assignments (N,), inertia)."""
+    z = jnp.asarray(z, jnp.float32)
+    centroids = _plusplus_init(key, z, k)
+
+    def step(c, _):
+        a, d2 = kmeans_assign(z, c)
+        onehot = jax.nn.one_hot(a, k, dtype=jnp.float32)
+        counts = onehot.sum(0)
+        sums = onehot.T @ z
+        new_c = jnp.where(counts[:, None] > 0,
+                          sums / jnp.maximum(counts[:, None], 1.0), c)
+        inertia = jnp.take_along_axis(d2, a[:, None], 1).sum()
+        return new_c, inertia
+
+    centroids, inertias = jax.lax.scan(step, centroids, None, length=iters)
+    a, d2 = kmeans_assign(z, centroids)
+    inertia = jnp.take_along_axis(d2, a[:, None], 1).sum()
+    return centroids, a, inertia
+
+
+def product_kmeans_fit(key, z, k_per_group: int, iters: int = 25):
+    """Product k-means (§7.3): split features into two halves, k-means
+    each; pair assignment indexes k^2 shards at sqrt cost."""
+    d = z.shape[-1]
+    k1, k2 = jax.random.split(key)
+    half = d // 2
+    c1, a1, _ = kmeans_fit(k1, z[:, :half], k_per_group, iters)
+    c2, a2, _ = kmeans_fit(k2, z[:, half:], k_per_group, iters)
+    return (c1, c2), a1 * k_per_group + a2
+
+
+def product_kmeans_assign(z, centroids_pair):
+    c1, c2 = centroids_pair
+    half = z.shape[-1] // 2
+    a1, _ = kmeans_assign(z[:, :half], c1)
+    a2, _ = kmeans_assign(z[:, half:], c2)
+    return a1 * c2.shape[0] + a2
+
+
+def topn_assign(z, centroids, n: int):
+    """Overlapping shards (§2.4.4): each sequence joins its n closest."""
+    _, d2 = kmeans_assign(z, centroids)
+    _, idx = jax.lax.top_k(-d2, n)
+    return idx  # (N, n)

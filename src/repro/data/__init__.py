@@ -1,0 +1,3 @@
+from .corpus import SyntheticCorpus
+from .sharder import PreShardedDataset, shard_documents
+from .loader import ShardLoader

@@ -1,0 +1,33 @@
+"""Deterministic per-shard batch loader (with-replacement sampling so
+small shards can feed long training, as in the paper's over-sampling
+discussion §2.7)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ShardLoader:
+    def __init__(self, tokens: np.ndarray, batch_size: int, seed: int = 0):
+        assert len(tokens) > 0, "empty shard"
+        self.tokens = tokens
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed)
+
+    def next_batch(self) -> np.ndarray:
+        idx = self.rng.integers(0, len(self.tokens), size=self.batch_size)
+        return self.tokens[idx]
+
+    def batches(self, n: int) -> np.ndarray:
+        """(n, batch, S) — convenient for lax.scan'd inner loops."""
+        return np.stack([self.next_batch() for _ in range(n)])
+
+
+def phase_batches(tokens: np.ndarray, batch_size: int, tau: int,
+                  shard_id: int, phase: int) -> np.ndarray:
+    """Deterministic (tau, batch, S) batch schedule keyed by
+    (shard, phase) — shared by the vectorized and infra trainers so the
+    two produce bit-identical training, and recomputable after worker
+    preemption (task idempotence)."""
+    rng = np.random.default_rng(1000 + shard_id * 131 + phase * 7919)
+    idx = rng.integers(0, len(tokens), size=(tau, batch_size))
+    return tokens[idx]

@@ -1,0 +1,4 @@
+from .task_queue import Task, TaskQueue
+from .ckpt_db import CheckpointDB
+from .worker_pool import WorkerPool
+from .outer_executor import ShardedOuterExecutors

@@ -1,0 +1,82 @@
+"""Checkpoint metadata table (the paper's Spanner table, §3 step 2) +
+npz checkpoint store (the paper's GFS).  Watchers (outer executors, eval
+workers) poll for rows they have not consumed yet."""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from dataclasses import asdict, dataclass, field
+
+import jax
+import numpy as np
+
+
+@dataclass
+class CkptRow:
+    path_id: int
+    phase: int
+    step: int
+    file: str
+    kind: str = "train"          # train | module
+    ts: float = field(default_factory=time.time)
+
+
+def save_tree(file: str, tree) -> None:
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    os.makedirs(os.path.dirname(file) or ".", exist_ok=True)
+    np.savez(file, treedef=json.dumps(str(treedef)),
+             **{f"leaf_{i}": np.asarray(x) for i, x in enumerate(flat)})
+
+
+def load_tree(file: str, like):
+    data = np.load(file)
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    loaded = [data[f"leaf_{i}"] for i in range(len(flat))]
+    return jax.tree_util.tree_unflatten(treedef, loaded)
+
+
+class CheckpointDB:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.Condition()
+        self._rows: list = []
+
+    def write(self, tree, *, path_id: int, phase: int, step: int,
+              kind: str = "train") -> CkptRow:
+        file = os.path.join(
+            self.root, f"{kind}_p{path_id:04d}_ph{phase:04d}_s{step}.npz")
+        save_tree(file, tree)
+        row = CkptRow(path_id=path_id, phase=phase, step=step, file=file,
+                      kind=kind)
+        with self._lock:
+            self._rows.append(row)
+            self._lock.notify_all()
+        return row
+
+    def rows(self, *, kind=None, phase=None) -> list:
+        with self._lock:
+            out = list(self._rows)
+        if kind is not None:
+            out = [r for r in out if r.kind == kind]
+        if phase is not None:
+            out = [r for r in out if r.phase == phase]
+        return out
+
+    def wait_for(self, predicate, timeout: float = 60.0):
+        """Block until a row matching predicate appears (§3 step 4)."""
+        deadline = time.time() + timeout
+        with self._lock:
+            while True:
+                hits = [r for r in self._rows if predicate(r)]
+                if hits:
+                    return hits
+                if time.time() >= deadline:
+                    return []
+                self._lock.wait(timeout=0.05)
+
+    def to_json(self) -> str:
+        with self._lock:
+            return json.dumps([asdict(r) for r in self._rows])

@@ -1,0 +1,224 @@
+"""Sharded outer-optimization executors (paper §3.3, Fig. 7).
+
+One executor per module (level, expert) plus one for the shared leaves.
+Executors consume path checkpoints *online* — a delta is accumulated
+into the partial sum as soon as its checkpoint appears (Online Parameter
+Gradient Averaging) — and apply the Nesterov outer update once every
+path through their module has reported.  The full model therefore never
+lives in one place; each executor holds only its module's parameters and
+momentum (Sharded Outer Optimization Executor).
+
+Produces updates bit-identical to the vectorized mixing formulation
+(core/diloco.py) — asserted in tests/test_infra.py.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.module_store import ModuleStore
+from repro.core.partition import PathPartition, paths_through_module
+from repro.optim.nesterov import nesterov_init, nesterov_update
+
+
+def _tree_add(acc, delta, scale):
+    return jax.tree_util.tree_map(
+        lambda a, d: a + scale * d.astype(jnp.float32)
+        if a is not None else None, acc, delta)
+
+
+def _tree_zeros(like):
+    return jax.tree_util.tree_map(
+        lambda x: None if x is None else jnp.zeros(x.shape, jnp.float32),
+        like)
+
+
+class _ModuleExecutor:
+    def __init__(self, store: ModuleStore, level: int, expert: int,
+                 member_workers, alphas, *, lr, momentum, nesterov,
+                 rescale, quorum: float = 1.0):
+        self.store = store
+        self.level, self.expert = level, expert
+        self.members = set(int(w) for w in member_workers)
+        self.alphas = {int(w): float(alphas[int(w)]) for w in member_workers}
+        self.lr, self.momentum, self.nesterov = lr, momentum, nesterov
+        self.rescale = rescale
+        self.quorum_frac = quorum
+        self.active = set(self.members)
+        self.quorum = max(1, math.ceil(quorum * len(self.active)))
+        params = store.module_params(level, expert)
+        self.mom_state = nesterov_init(jax.tree_util.tree_map(
+            lambda x: None if x is None else x.astype(jnp.float32), params))
+        self._reset()
+        self.updates = 0
+        self._lock = threading.Lock()
+
+    def set_active(self, active_workers) -> None:
+        """Path sampling (paper §2.6.2): only a subset of paths trains
+        this phase; the module updates from whichever of its
+        contributors are active (none active -> module untouched)."""
+        with self._lock:
+            self.active = self.members & set(int(w) for w in active_workers)
+            self.quorum = max(1, math.ceil(
+                self.quorum_frac * max(len(self.active), 1)))
+            self._reset()
+
+    def _reset(self):
+        self.acc = _tree_zeros(self.store.module_params(self.level,
+                                                        self.expert))
+        self.seen: set = set()
+        self.wsum = 0.0
+
+    def accumulate(self, worker_id: int, delta_tree) -> bool:
+        """Online accumulation; returns True if this reached quorum and
+        the outer update was applied.  quorum < 1.0 = async outer
+        updates: stragglers fold into the next accumulation window."""
+        if worker_id not in self.active:
+            return False
+        seg = self.store.slice_for_level(delta_tree, self.level)
+        with self._lock:
+            if worker_id in self.seen:
+                return False   # duplicate (retried task) — idempotent
+            a = self.alphas[worker_id]
+            self.acc = _tree_add(self.acc, seg, a)
+            self.wsum += a
+            self.seen.add(worker_id)
+            if len(self.seen) < self.quorum:
+                return False
+            self._apply_locked()
+            return True
+
+    def _apply_locked(self):
+        scale = (math.sqrt(len(self.seen)) if self.rescale else 1.0) \
+            / max(self.wsum, 1e-12)
+        outer_grad = jax.tree_util.tree_map(
+            lambda a: None if a is None else a * scale, self.acc)
+        params = self.store.module_params(self.level, self.expert)
+        params32 = jax.tree_util.tree_map(
+            lambda x: None if x is None else x.astype(jnp.float32), params)
+        new_params, self.mom_state = nesterov_update(
+            outer_grad, self.mom_state, params32, lr=self.lr,
+            momentum=self.momentum, nesterov=self.nesterov)
+        cast = jax.tree_util.tree_map(
+            lambda n, o: None if o is None else n.astype(o.dtype),
+            new_params, params)
+        self.store.set_module(self.level, self.expert, cast)
+        self.updates += 1
+        self._reset()
+
+
+class _SharedExecutor:
+    """Embeddings / final norm — shared by all paths (or untouched when
+    unshared; then each path's copy is updated independently)."""
+    def __init__(self, store: ModuleStore, num_workers: int, alphas, *,
+                 lr, momentum, nesterov, rescale):
+        self.store = store
+        self.members = set(range(num_workers))
+        self.active = set(self.members)
+        self.alphas = alphas
+        self.lr, self.momentum, self.nesterov = lr, momentum, nesterov
+        self.rescale = rescale
+        self.mom_state = nesterov_init(jax.tree_util.tree_map(
+            lambda x: None if x is None else x.astype(jnp.float32),
+            store.shared))
+        self._lock = threading.Lock()
+        self._reset()
+        self.updates = 0
+
+    def _reset(self):
+        self.acc = _tree_zeros(self.store.shared)
+        self.seen: set = set()
+        self.wsum = 0.0
+
+    def set_active(self, active_workers) -> None:
+        with self._lock:
+            self.active = self.members & set(int(w) for w in active_workers)
+            self._reset()
+
+    def accumulate(self, worker_id: int, delta_tree) -> bool:
+        if worker_id not in self.active:
+            return False
+        seg = self.store.shared_of(delta_tree)
+        with self._lock:
+            if worker_id in self.seen:
+                return False
+            a = float(self.alphas[worker_id])
+            self.acc = _tree_add(self.acc, seg, a)
+            self.wsum += a
+            self.seen.add(worker_id)
+            if self.seen != self.active:
+                return False
+            scale = (math.sqrt(len(self.seen)) if self.rescale else 1.0) \
+                / max(self.wsum, 1e-12)
+            og = jax.tree_util.tree_map(
+                lambda x: None if x is None else x * scale, self.acc)
+            shared32 = jax.tree_util.tree_map(
+                lambda x: None if x is None else x.astype(jnp.float32),
+                self.store.shared)
+            new, self.mom_state = nesterov_update(
+                og, self.mom_state, shared32, lr=self.lr,
+                momentum=self.momentum, nesterov=self.nesterov)
+            cast = jax.tree_util.tree_map(
+                lambda n, o: None if o is None else n.astype(o.dtype),
+                new, self.store.shared)
+            self.store.set_shared(cast)
+            self.updates += 1
+            self._reset()
+            return True
+
+
+class ShardedOuterExecutors:
+    def __init__(self, store: ModuleStore, partition: PathPartition,
+                 worker_paths, alphas=None, *, lr=0.7, momentum=0.9,
+                 nesterov=True, rescale=True, quorum: float = 1.0):
+        worker_paths = np.asarray(worker_paths)
+        W = len(worker_paths)
+        if alphas is None:
+            alphas = np.ones(W) / W
+        self.execs = {}
+        for l in range(partition.num_levels):
+            n_experts = int(partition.paths[:, l].max()) + 1
+            for e in range(n_experts):
+                paths = paths_through_module(partition, l, e)
+                members = [w for w in range(W)
+                           if worker_paths[w] in paths]
+                if not members:
+                    continue
+                self.execs[(l, e)] = _ModuleExecutor(
+                    store, l, e, members, alphas, lr=lr, momentum=momentum,
+                    nesterov=nesterov, rescale=rescale, quorum=quorum)
+        self.shared_exec = None
+        if partition.shared_embeddings:
+            self.shared_exec = _SharedExecutor(
+                store, W, alphas, lr=lr, momentum=momentum,
+                nesterov=nesterov, rescale=rescale)
+
+    def set_active(self, active_workers) -> None:
+        """Path sampling (§2.6.2): restrict this phase's contributors."""
+        for ex in self.execs.values():
+            ex.set_active(active_workers)
+        if self.shared_exec is not None:
+            self.shared_exec.set_active(active_workers)
+
+    def accumulate(self, worker_id: int, delta_tree) -> list:
+        """Feed one path checkpoint; returns modules completed by it."""
+        completed = []
+        for key, ex in self.execs.items():
+            if ex.accumulate(worker_id, delta_tree):
+                completed.append(key)
+        if self.shared_exec is not None:
+            if self.shared_exec.accumulate(worker_id, delta_tree):
+                completed.append("shared")
+        return completed
+
+    @property
+    def total_updates(self) -> int:
+        n = sum(ex.updates for ex in self.execs.values())
+        if self.shared_exec:
+            n += self.shared_exec.updates
+        return n

@@ -1,0 +1,107 @@
+"""Thread worker pool with preemption injection (paper §3.1, §3.4).
+
+Workers repeatedly fetch tasks from the queue and run a handler.  A
+``preempt_prob`` simulates low-tier backup-pool preemptions: the worker
+"dies" mid-task (raises), the queue lease expires / fail() requeues the
+task, and another worker picks it up — training progress must be
+unaffected (tested in tests/test_infra.py).
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+import traceback
+from typing import Callable
+
+from .task_queue import Task, TaskQueue
+
+
+class Preempted(RuntimeError):
+    pass
+
+
+class WorkerPool:
+    def __init__(self, queue: TaskQueue, handler: Callable[[Task], object],
+                 *, num_workers: int = 4, preempt_prob: float = 0.0,
+                 seed: int = 0, name: str = "pool"):
+        self.queue = queue
+        self.handler = handler
+        self.num_workers = num_workers
+        self.preempt_prob = preempt_prob
+        self.rng = random.Random(seed)
+        self.name = name
+        self._threads: list = []
+        self._stop = threading.Event()
+        self.completed = 0
+        self.preemptions = 0
+        self._lock = threading.Lock()
+
+    def _run(self, wid: int):
+        while not self._stop.is_set():
+            task = self.queue.fetch(timeout=0.2)
+            if task is None:
+                if self.queue._closed:
+                    return
+                continue
+            try:
+                if self.rng.random() < self.preempt_prob:
+                    with self._lock:
+                        self.preemptions += 1
+                    raise Preempted(f"worker {wid} preempted")
+                result = self.handler(task)
+                self.queue.complete(task.task_id, result)
+                with self._lock:
+                    self.completed += 1
+            except Preempted as e:
+                self.queue.fail(task.task_id, str(e))
+            except Exception as e:  # noqa: BLE001 - worker crash -> requeue
+                self.queue.fail(task.task_id,
+                                f"{e}\n{traceback.format_exc()[-500:]}")
+
+    def start(self):
+        for i in range(self.num_workers):
+            t = threading.Thread(target=self._run, args=(i,),
+                                 name=f"{self.name}-{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self, timeout: float = 5.0):
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=timeout)
+
+
+class Monitor:
+    """§3 step 6: periodically checks worker health and restarts dead
+    workers (threads that terminated while the pool is active)."""
+    def __init__(self, pool: WorkerPool, period: float = 0.5):
+        self.pool = pool
+        self.period = period
+        self.restarts = 0
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        while not self._stop.is_set():
+            time.sleep(self.period)
+            alive = [t for t in self.pool._threads if t.is_alive()]
+            dead = len(self.pool._threads) - len(alive)
+            if dead and not self.pool._stop.is_set():
+                self.pool._threads = alive
+                for _ in range(dead):
+                    i = len(self.pool._threads)
+                    t = threading.Thread(
+                        target=self.pool._run, args=(i,),
+                        name=f"{self.pool.name}-r{i}", daemon=True)
+                    t.start()
+                    self.pool._threads.append(t)
+                    self.restarts += 1
+
+    def start(self):
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()

@@ -1,0 +1,116 @@
+"""Fused flash attention (TPU Pallas): causal + sliding-window + GQA.
+
+Online-softmax accumulation across key blocks; the innermost grid
+dimension walks key blocks sequentially so VMEM scratch (m, l, acc)
+carries across iterations (canonical TPU flash pattern).  Fully-masked
+key blocks (future causal blocks / expired window blocks) are skipped
+with pl.when — the kernel analogue of the XLA-level ``causal_skip``
+optimization in models/layers.py.
+
+Target: TPU v5e MXU — block_q x block_k tiles default 128x128 (MXU
+aligned); VMEM working set per step ~ (2*block_q + 2*block_k) * head_dim
+* 4B, well under the 16 MiB budget for head_dim <= 256.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window, block_q: int, block_k: int,
+                  nk: int, scale: float):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = i * block_q
+    k_start = j * block_k
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(run, k_start + block_k - 1
+                              > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)      # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _write():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, S, H, D); k, v: (B, S, KH, D) -> (B, S, H, D)."""
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    assert h % kh == 0
+    g = h // kh
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq, nk = s // block_q, s // block_k
+    scale = 1.0 / math.sqrt(d)
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, nk=nk, scale=scale)
+    grid = (b, h, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d),
+                         lambda bi, hi, i, j: (bi, i, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, i, j: (bi, j, hi // g, 0)),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, hi, i, j: (bi, j, hi // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d),
+                               lambda bi, hi, i, j: (bi, i, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

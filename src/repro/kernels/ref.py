@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """Same semantics as kernels.flash_attention (GQA via kv repeat)."""
+    from repro.models.layers import full_attention
+    return full_attention(q, k, v, causal=causal, window=window)
+
+
+def router_assign_ref(z, centroids):
+    z = z.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    d2 = (jnp.sum(z * z, -1, keepdims=True) - 2 * z @ c.T
+          + jnp.sum(c * c, -1)[None, :])
+    return jnp.argmin(d2, -1).astype(jnp.int32), jnp.min(d2, -1)
+
+
+def ssd_scan_ref(x, dt, a, bmat, cmat, *, chunk=128):
+    """Per-head-broadcast SSD; delegates to the model's chunked oracle."""
+    from repro.models.ssm import ssd_chunked
+    y, _ = ssd_chunked(x, dt, a, bmat, cmat, chunk)
+    return y
+
+
+def expert_gemm_ref(xe, w):
+    return jnp.einsum("ecd,edf->ecf", xe.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(xe.dtype)

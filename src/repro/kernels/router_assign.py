@@ -1,0 +1,56 @@
+"""k-means routing assignment kernel (paper Eq. 1) — the offline
+pre-sharding hot loop: argmin_i ||z - c_i||^2 over millions of documents.
+
+Grid over feature-row blocks; the centroid table stays resident in VMEM
+(K x D, e.g. 256 x 1024 f32 = 1 MiB).  Emits both the assignment and the
+full distance row minimum (used for shard statistics / top-n overlap is
+handled by the ops wrapper via a second pass).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assign_kernel(z_ref, c_ref, a_ref, d_ref):
+    z = z_ref[...].astype(jnp.float32)            # (bn, D)
+    c = c_ref[...].astype(jnp.float32)            # (K, D)
+    d2 = (jnp.sum(z * z, -1, keepdims=True)
+          - 2.0 * jax.lax.dot_general(z, c, (((1,), (1,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+          + jnp.sum(c * c, -1)[None, :])          # (bn, K)
+    a_ref[...] = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    d_ref[...] = jnp.min(d2, axis=-1)
+
+
+def router_assign(z, centroids, *, block_n: int = 256,
+                  interpret: bool = False):
+    """z: (N, D), centroids: (K, D) -> (assign (N,) int32, mind2 (N,))."""
+    n, d = z.shape
+    k = centroids.shape[0]
+    pad = (-n) % block_n
+    if pad:
+        z = jnp.pad(z, ((0, pad), (0, 0)))
+    nn = z.shape[0]
+    grid = (nn // block_n,)
+    a, d2 = pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nn,), jnp.int32),
+            jax.ShapeDtypeStruct((nn,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(z, centroids)
+    return a[:n], d2[:n]

@@ -1,0 +1,8 @@
+"""Launch layer: production mesh, sharding rules, distributed step
+builders, AOT multi-pod dry-run, train/serve CLIs.
+
+NOTE: do not import repro.launch.dryrun from library code — it forces
+``xla_force_host_platform_device_count=512`` at import (by design, for
+the CLI only).
+"""
+from .mesh import make_debug_mesh, make_production_mesh, num_workers

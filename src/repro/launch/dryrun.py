@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh).
+
+The two lines above MUST run before any other import (jax locks the
+device count at first init).  512 host placeholder devices let
+``jax.make_mesh`` build the production meshes: (16,16) single-pod and
+(2,16,16) two-pod.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models.config import INPUT_SHAPES
+from repro.launch import specs as SP
+from repro.launch.flopmodel import analyze as flop_analyze
+from repro.launch.hlo_analysis import collective_stats, roofline_terms
+from repro.launch.mesh import make_production_mesh
+
+# shapes skipped per assignment rules (noted in DESIGN.md):
+#   - long_500k requires sub-quadratic attention: SSM/hybrid run natively;
+#     all attention archs here use the sliding-window variant, so none skip.
+SKIP: dict = {}
+
+
+def _supports(cfg, shape) -> tuple:
+    if shape.name == "long_500k" and cfg.arch_type not in ("ssm", "hybrid"):
+        # dense/moe/audio/vlm run long_500k only via sliding window
+        return True, "sliding_window"
+    return True, ""
+
+
+def opt_transform(cfg):
+    """Beyond-paper optimized variant (EXPERIMENTS.md §Perf):
+      - causal chunk skipping (structural S^2/2 attention FLOPs),
+      - scatter MoE dispatch (dispatch einsum FLOPs -> memory traffic),
+      - island-internal data parallelism for small-d paths (the DiPaCo
+        regime: a path fits an island; TP activations collectives are
+        the wrong trade below d_model ~ 2048),
+      - dots-saveable remat (skip recomputing matmuls).
+    The bf16 logits boundary fix is unconditional (models/layers.py).
+    """
+    kw = dict(causal_skip=True, remat_policy="dots")
+    # NOTE: scatter MoE dispatch was tried here and REFUTED for sharded
+    # settings (EXPERIMENTS.md §Perf iteration 2b): data-dependent
+    # scatters force GSPMD into replicated-buffer all-reduces (qwen3-moe
+    # prefill collective 9.2s -> 37.5s).  The one-hot capacity einsum is
+    # the TPU-native dispatch whenever tokens/experts are sharded;
+    # scatter remains the island-LOCAL fast path (used by the CPU
+    # trainer and the moe_gmm Pallas kernel).
+    if cfg.d_model <= 2048 and cfg.arch_type != "ssm":
+        kw["island_parallelism"] = "data"
+    if cfg.encoder is not None:
+        kw["cross_kv_cache"] = True   # perf iteration N5 (whisper decode)
+    else:
+        kw["kv_quant"] = True         # perf iteration N7 (decode memory)
+    return cfg.replace(**kw)
+
+
+def run_case(arch: str, shape_name: str, *, multi_pod: bool,
+             with_outer: bool = False, verbose: bool = True,
+             variant: str = "base", tp: int | None = None) -> dict:
+    cfg = get_config(arch)
+    if variant == "opt":
+        cfg = opt_transform(cfg)
+    shape = INPUT_SHAPES[shape_name]
+    ok, note = _supports(cfg, shape)
+    if tp is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+    else:
+        # sharding-scheme search (§Perf): same 256 chips, narrower
+        # islands — per-worker batch (and thus TP activation collective
+        # bytes) shrink linearly with the worker count
+        import jax as _jax
+        assert not multi_pod
+        mesh = _jax.make_mesh((256 // tp, tp), ("data", "model"))
+        mesh_name = f"{256 // tp}x{tp}"
+    chips = mesh.devices.size
+    if shape.name == "long_500k" and cfg.arch_type not in ("ssm", "hybrid"):
+        cfg = cfg.replace(sliding_window=shape.window)
+    rec = {"arch": arch, "shape": shape_name, "variant": variant,
+           "mesh": mesh_name, "note": note}
+    t0 = time.time()
+    try:
+        with mesh:
+            case = SP.build_case(cfg, shape, mesh)
+            jitted = jax.jit(case.fn)
+            lowered = jitted.lower(*case.args)
+            compiled = lowered.compile()
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0] if cost else {}
+            mem = compiled.memory_analysis()
+            hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+        flops_dev = float(cost.get("flops", 0.0))
+        bytes_dev = float(cost.get("bytes accessed", 0.0))
+        rep = flop_analyze(cfg, shape,
+                           num_workers=case.static.get("workers", 1))
+        rec.update({
+            "ok": True,
+            "workers": case.static.get("workers"),
+            "compile_s": round(time.time() - t0, 1),
+            # raw XLA numbers (scan bodies counted once — see flopmodel.py)
+            "xla_flops_per_device": flops_dev,
+            "xla_bytes_per_device": bytes_dev,
+            # analytic whole-step numbers used for the roofline
+            "total_flops": rep.total_flops,
+            "total_bytes": rep.hbm_bytes,
+            "fwd_flops": rep.fwd_flops,
+            "flop_breakdown": rep.breakdown,
+            "collectives": coll,
+        })
+        if mem is not None:
+            try:
+                rec["memory"] = {
+                    "argument_bytes": int(mem.argument_size_in_bytes),
+                    "output_bytes": int(mem.output_size_in_bytes),
+                    "temp_bytes": int(mem.temp_size_in_bytes),
+                    "code_bytes": int(mem.generated_code_size_in_bytes),
+                }
+            except Exception:
+                rec["memory"] = {"repr": str(mem)[:500]}
+        rl = roofline_terms(total_flops=rec["total_flops"],
+                            total_bytes=rec["total_bytes"],
+                            collective_bytes_per_device=coll["total_bytes"],
+                            chips=chips)
+        rec["roofline"] = rl
+        rec["model_flops"] = SP.model_flops(cfg, shape)
+        rec["useful_flops_ratio"] = (
+            rec["model_flops"] / rec["total_flops"]
+            if rec["total_flops"] else 0.0)
+        if with_outer and shape.kind == "train":
+            o = run_outer(cfg, shape, mesh, chips)
+            rec["outer"] = o
+        if verbose:
+            rl_s = {k: (f"{v:.4f}" if isinstance(v, float) else v)
+                    for k, v in rl.items()}
+            print(f"[OK] {rec['arch']}:{shape_name}:{rec['mesh']} "
+                  f"compile={rec['compile_s']}s roofline={rl_s} "
+                  f"useful={rec['useful_flops_ratio']:.3f}")
+    except Exception as e:  # noqa: BLE001 — record dry-run bugs, don't die
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:],
+                    "compile_s": round(time.time() - t0, 1)})
+        if verbose:
+            print(f"[FAIL] {arch}:{shape_name}:{rec['mesh']}: {rec['error']}")
+    return rec
+
+
+def run_outer(cfg, shape, mesh, chips) -> dict:
+    case = SP.build_outer_case(cfg, shape, mesh)
+    lowered = jax.jit(case.fn).lower(*case.args)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    coll = collective_stats(compiled.as_text())
+    return {
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--with-outer", action="store_true")
+    ap.add_argument("--variant", choices=["base", "opt"], default="base")
+    ap.add_argument("--tp", type=int, default=None,
+                    help="island TP width (single-pod mesh reshape)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_case(arch, shape, multi_pod=mp,
+                               with_outer=args.with_outer,
+                               variant=args.variant, tp=args.tp)
+                records.append(rec)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(records, f, indent=1)
+    n_ok = sum(r["ok"] for r in records)
+    print(f"\n{n_ok}/{len(records)} cases compiled OK")
+    if args.out:
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Post-compile HLO analysis: collective-bytes extraction + roofline terms.
+
+The dry-run's "profile" (no real TPU): the optimized HLO text gives the
+collective schedule.  Because collectives inside ``lax.scan`` lower into
+while-loop *body* computations that appear once in the text, the parser
+is hierarchical: it attributes collectives to their computation and
+multiplies while-bodies by the loop trip count (recovered from the
+loop-condition's comparison constant).
+
+Collective cost model (ICI bytes per device):
+  all-reduce         2 x result bytes   (reduce-scatter + all-gather ring)
+  all-gather         result bytes
+  reduce-scatter     operand bytes (~ result x shards)
+  all-to-all         result bytes
+  collective-permute result bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^=]*?\)|\w+\[[0-9,]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->.*\{")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _parse_computations(hlo_text: str) -> tuple:
+    comps: dict = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_START_RE.match(line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = {"collectives": [], "whiles": [], "text": []}
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        comp = comps[cur]
+        comp["text"].append(line)
+        cm = _COLL_RE.search(line)
+        if cm:
+            op = cm.group(2)
+            comp["collectives"].append(
+                (op, _shape_bytes(cm.group(1)) * _MULT[op]))
+        wm = _WHILE_RE.search(line)
+        if wm:
+            comp["whiles"].append((wm.group(1), wm.group(2)))
+    return comps, entry
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    comp = comps.get(cond_name)
+    if not comp:
+        return 1
+    consts = [int(c) for ln in comp["text"] for c in _CONST_RE.findall(ln)]
+    return max(consts) if consts else 1
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Trip-count-weighted collective counts and modelled ICI bytes."""
+    comps, entry = _parse_computations(hlo_text)
+
+    memo: dict = {}
+
+    def eff(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None or depth > 50:
+            return defaultdict(float), defaultdict(float)
+        counts: dict = defaultdict(float)
+        bytes_: dict = defaultdict(float)
+        for op, b in comp["collectives"]:
+            counts[op] += 1
+            bytes_[op] += b
+        for cond, body in comp["whiles"]:
+            t = _trip_count(comps, cond)
+            bc, bb = eff(body, depth + 1)
+            for k, v in bc.items():
+                counts[k] += t * v
+            for k, v in bb.items():
+                bytes_[k] += t * v
+        memo[name] = (counts, bytes_)
+        return memo[name]
+
+    if entry is None:
+        entry = next(iter(comps), None)
+    counts, bytes_ = eff(entry) if entry else ({}, {})
+    return {
+        "counts": {k: int(v) for k, v in counts.items()},
+        "bytes_by_op": {k: float(v) for k, v in bytes_.items()},
+        "total_bytes": float(sum(bytes_.values())),
+        "total_count": int(sum(counts.values())),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms — TPU v5e target constants (per chip)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link (given)
+
+
+def roofline_terms(*, total_flops: float, total_bytes: float,
+                   collective_bytes_per_device: float, chips: int) -> dict:
+    """All three roofline terms in seconds.
+
+    total_flops / total_bytes are whole-program (all chips); collective
+    bytes are per-device (the HLO module is the per-device program).
+    """
+    compute_s = total_flops / (chips * PEAK_FLOPS_BF16)
+    memory_s = total_bytes / (chips * HBM_BW)
+    collective_s = collective_bytes_per_device / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+    return terms

@@ -1,0 +1,30 @@
+"""Production mesh construction (never touches device state at import)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(num_devices: int | None = None, model: int = 2):
+    """Small mesh for in-process tests (host platform devices)."""
+    n = num_devices or len(jax.devices())
+    data = max(1, n // model)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def worker_axes(mesh) -> tuple:
+    """Mesh axes that enumerate DiPaCo path-workers (islands)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def num_workers(mesh) -> int:
+    n = 1
+    for a in worker_axes(mesh):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,151 @@
+"""Distributed DiPaCo step builders (stacked-worker formulation).
+
+Inner train step: every worker (island) trains its own path on its own
+shard — expressed as ``vmap`` over a leading worker axis that is sharded
+over the ("pod","data") mesh axes.  Per-step collectives therefore stay
+on the "model" axis (tensor parallel inside an island).
+
+Outer step: DiLoCo-per-module mixing across the worker axis — the only
+cross-island communication, once per tau inner steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.diloco import outer_step as _outer_step
+from repro.models import api
+from repro.models import params as P
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# Shapes / init helpers
+# ---------------------------------------------------------------------------
+def init_worker_params(key, cfg: ModelConfig, num_workers: int):
+    """All workers start from the same pretrained init (Algorithm 1)."""
+    params, axes = api.init_model(key, cfg)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (num_workers, *x.shape)), params)
+    return stacked, axes
+
+
+def model_param_shapes(cfg: ModelConfig):
+    """(shapes, axes) via eval_shape — no allocation, safe for 340B."""
+    box = {}
+
+    def init():
+        p, a = api.init_model(jax.random.PRNGKey(0), cfg)
+        box["axes"] = a
+        return p
+
+    shapes = jax.eval_shape(init)
+    return shapes, box["axes"]
+
+
+def worker_param_shapes(cfg: ModelConfig, num_workers: int):
+    """Stacked eval_shape version (no allocation) for AOT lowering."""
+    shapes, axes = model_param_shapes(cfg)
+    stacked = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((num_workers, *s.shape), s.dtype),
+        shapes)
+    return stacked, axes
+
+
+def adamw_state_shapes(param_shapes):
+    f32 = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), param_shapes)
+    return {"m": f32, "v": f32,
+            "count": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Inner train step
+# ---------------------------------------------------------------------------
+def make_inner_train_step(cfg: ModelConfig):
+    """(worker_params, opt_state, batch, lr) -> (params, opt, metrics).
+
+    worker_params: (W, ...) stacked; opt_state: vmapped AdamW state per
+    worker; batch: dict of (W, B_local, ...) arrays.
+    """
+    def one_worker(params, opt_state, batch, lr):
+        (loss, parts), grads = jax.value_and_grad(
+            api.forward_loss, has_aux=True)(params, cfg, batch)
+        new_params, new_opt = adamw_update(grads, opt_state, params, lr=lr)
+        return new_params, new_opt, {"loss": loss, **parts}
+
+    def step(worker_params, opt_state, batch, lr):
+        return jax.vmap(one_worker, in_axes=(0, 0, 0, None))(
+            worker_params, opt_state, batch, lr)
+
+    return step
+
+
+def make_sync_train_step(cfg: ModelConfig, mix_layers, mix_shared, axes):
+    """Fully-synchronous DiPaCo baseline (paper §4.5): per-step gradient
+    mixing across paths, module by module, then a single AdamW update."""
+    from repro.core.diloco import mix_deltas
+
+    def step(worker_params, opt_state, batch, lr):
+        def loss_fn(params, b):
+            loss, parts = api.forward_loss(params, cfg, b)
+            return loss, parts
+
+        (loss, parts), grads = jax.vmap(
+            jax.value_and_grad(loss_fn, has_aux=True))(worker_params, batch)
+        mixed = mix_deltas(grads, axes, mix_layers, mix_shared)
+        new_params, new_opt = jax.vmap(
+            lambda g, o, p: adamw_update(g, o, p, lr=lr))(
+                mixed, opt_state, worker_params)
+        return new_params, new_opt, {"loss": loss, **parts}
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Outer (DiLoCo) step
+# ---------------------------------------------------------------------------
+def make_outer_step(cfg: ModelConfig, axes, *, lr=0.7, momentum=0.9,
+                    nesterov=True):
+    def step(worker_params, global_params, outer_state, mix_layers,
+             mix_shared):
+        return _outer_step(worker_params, global_params, outer_state, axes,
+                           mix_layers, mix_shared, lr=lr, momentum=momentum,
+                           nesterov=nesterov)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig):
+    """Forward scoring over stacked workers: batch dict of (W, b, ...)."""
+    def step(worker_params, batch):
+        def one(params, b):
+            logits, aux = api.forward_logits(params, cfg, b)
+            return logits
+
+        return jax.vmap(one)(worker_params, batch)
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, *, window=None, stacked: bool = True):
+    """One-token decode; stacked=False for single-path (long-context)."""
+    def one(params, batch, cache, index):
+        return api.serve_step(params, cfg, batch, cache, index,
+                              window=window)
+
+    if not stacked:
+        return one
+
+    def step(worker_params, batch, caches, index):
+        return jax.vmap(one, in_axes=(0, 0, 0, None))(
+            worker_params, batch, caches, index)
+
+    return step

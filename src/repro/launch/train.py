@@ -1,0 +1,75 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b \
+        --levels 4x4 --phases 2 --tau 20 [--smoke]
+
+On a TPU fleet this launches the stacked-worker DiPaCo train step on
+``make_production_mesh()``; on this CPU container ``--smoke`` (default
+when only one device is present) uses the reduced config and a debug
+mesh so the same code path runs end to end.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.dipaco import DiPaCoTrainer
+from repro.core.routing import kmeans_fit, prefix_features
+from repro.data import SyntheticCorpus, shard_documents
+from repro.models import api
+from repro.models.config import DiPaCoConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dipaco-150m")
+    ap.add_argument("--levels", default="2x2")
+    ap.add_argument("--phases", type=int, default=2)
+    ap.add_argument("--tau", type=int, default=10)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--docs", type=int, default=512)
+    ap.add_argument("--smoke", action="store_true", default=None)
+    args = ap.parse_args()
+
+    smoke = args.smoke
+    if smoke is None:
+        smoke = jax.default_backend() != "tpu"
+    cfg = (get_smoke_config(args.arch) if smoke
+           else get_config(args.arch)).replace(route_prefix_len=8)
+    levels = tuple(int(x) for x in args.levels.split("x"))
+    P = int(np.prod(levels))
+    print(f"[launch] arch={cfg.name} smoke={smoke} levels={levels} "
+          f"paths={P} devices={len(jax.devices())}")
+
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size,
+                             num_domains=max(8, P), seq_len=args.seq,
+                             seed=0)
+    docs = corpus.sample_documents(args.docs)
+    key = jax.random.PRNGKey(0)
+    base, _ = api.init_model(key, cfg)
+    feats = prefix_features(base, cfg, jnp.asarray(docs))
+    _, assign, _ = kmeans_fit(jax.random.PRNGKey(1), feats, P)
+    ds = shard_documents(docs, np.asarray(assign), P)
+
+    tr = DiPaCoTrainer(cfg, DiPaCoConfig(levels=levels,
+                                         inner_steps=args.tau), ds,
+                       key=key, base_params=base,
+                       batch_size=args.batch_size, peak_lr=2e-3,
+                       warmup=args.tau,
+                       total_steps=args.phases * args.tau)
+    t0 = time.time()
+    for ph in range(args.phases):
+        m = tr.run_phase()
+        print(f"[phase {ph}] loss {m.mean_loss:.4f} "
+              f"({time.time() - t0:.1f}s)")
+    print("[done]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Unified model API over decoder-LMs and encoder-decoders.
+
+All call sites (DiPaCo trainer, dry-run, serving, tests) go through:
+  init_model(key, cfg)            -> (params, axes)
+  forward_loss(params, cfg, batch)-> (loss, aux)   batch: dict of arrays
+  forward_logits(params, cfg, batch) -> logits
+  init_serve_cache(cfg, batch, cache_len)
+  serve_step(params, cfg, batch, cache, index) -> (logits, new_cache)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import encdec as ED
+from . import lm as LM
+from .lm import lm_loss_mean
+
+
+def is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.encoder is not None
+
+
+def init_model(key, cfg: ModelConfig):
+    if is_encdec(cfg):
+        return ED.init_encdec(key, cfg)
+    return LM.init_lm(key, cfg)
+
+
+def forward_logits(params, cfg: ModelConfig, batch, *, window=None):
+    if is_encdec(cfg):
+        logits, aux = ED.apply_encdec(params, cfg, batch["tokens"],
+                                      batch["frames"], window=window)
+    else:
+        logits, aux = LM.apply_lm(params, cfg, batch["tokens"],
+                                  patch_embeds=batch.get("patch_embeds"),
+                                  window=window)
+    return logits, aux
+
+
+def forward_loss(params, cfg: ModelConfig, batch, *, window=None):
+    logits, aux = forward_logits(params, cfg, batch, window=window)
+    loss = lm_loss_mean(logits, batch["tokens"], cfg.route_prefix_len)
+    return loss + aux, {"lm_loss": loss, "aux_loss": aux}
+
+
+def init_serve_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    if is_encdec(cfg):
+        return ED.init_encdec_cache(cfg, batch, cache_len)
+    return LM.init_decode_cache(cfg, batch, cache_len)
+
+
+def serve_step(params, cfg: ModelConfig, batch, cache, index, *, window=None):
+    """One-token decode.  batch: dict(tokens (B,1) [+ enc_out and/or
+    precomputed cross_kv for enc-dec models])."""
+    if is_encdec(cfg):
+        return ED.decode_step_encdec(params, cfg, batch["tokens"],
+                                     batch.get("enc_out"), cache, index,
+                                     window=window,
+                                     cross_kv=batch.get("cross_kv"))
+    return LM.decode_step(params, cfg, batch["tokens"], cache, index,
+                          window=window)

@@ -1,0 +1,204 @@
+"""Whisper-style encoder–decoder backbone.
+
+The mel/conv frontend is a STUB per the assignment carve-out:
+``input_specs()`` supplies precomputed frame embeddings (B, T_src,
+d_source); we implement the transformer encoder that consumes them and
+the causal decoder with cross-attention.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import params as P
+from .config import ModelConfig
+from .layers import (apply_attention, apply_mlp, embed_tokens, init_attention,
+                     init_embedding, init_mlp, init_rmsnorm, rms_norm, unembed)
+from .lm import init_decode_cache as _init_cache_unused  # noqa: F401
+
+
+def _sinusoidal(positions, dim):
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_encdec(key, cfg: ModelConfig):
+    enc = cfg.encoder
+    keys = jax.random.split(key, 8)
+    params, axes = {}, {}
+    params["embed"], axes["embed"] = init_embedding(keys[0], cfg)
+    params["src_proj"] = jax.random.normal(
+        keys[1], (enc.d_source, cfg.d_model)) / math.sqrt(enc.d_source)
+    axes["src_proj"] = (None, P.EMBED)
+
+    def stack_layers(k, n, init_one):
+        ks = jax.random.split(k, n)
+        parts = [init_one(kk) for kk in ks]
+        p = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                   *[t[0] for t in parts])
+        a = jax.tree_util.tree_map(lambda ax: (P.LAYERS, *ax), parts[0][1],
+                                   is_leaf=lambda x: isinstance(x, tuple))
+        return p, a
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        p = {"norm1": init_rmsnorm(cfg.d_model)[0],
+             "attn": init_attention(k1, cfg)[0],
+             "norm2": init_rmsnorm(cfg.d_model)[0],
+             "mlp": init_mlp(k2, cfg)[0]}
+        a = {"norm1": init_rmsnorm(cfg.d_model)[1],
+             "attn": init_attention(k1, cfg)[1],
+             "norm2": init_rmsnorm(cfg.d_model)[1],
+             "mlp": init_mlp(k2, cfg)[1]}
+        return p, a
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        p = {"norm1": init_rmsnorm(cfg.d_model)[0],
+             "self_attn": init_attention(k1, cfg)[0],
+             "norm_x": init_rmsnorm(cfg.d_model)[0],
+             "cross_attn": init_attention(k2, cfg, cross=True)[0],
+             "norm2": init_rmsnorm(cfg.d_model)[0],
+             "mlp": init_mlp(k3, cfg)[0]}
+        a = {"norm1": init_rmsnorm(cfg.d_model)[1],
+             "self_attn": init_attention(k1, cfg)[1],
+             "norm_x": init_rmsnorm(cfg.d_model)[1],
+             "cross_attn": init_attention(k2, cfg, cross=True)[1],
+             "norm2": init_rmsnorm(cfg.d_model)[1],
+             "mlp": init_mlp(k3, cfg)[1]}
+        return p, a
+
+    params["enc"], axes["enc"] = stack_layers(keys[2], enc.num_layers, enc_layer)
+    params["dec"], axes["dec"] = stack_layers(keys[3], cfg.num_layers, dec_layer)
+    params["enc_norm"], axes["enc_norm"] = init_rmsnorm(cfg.d_model)
+    params["final_norm"], axes["final_norm"] = init_rmsnorm(cfg.d_model)
+    params = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.dtype(cfg.dtype))
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+    return params, axes
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, T, d_source) stub embeddings -> (B, T, d_model)."""
+    x = frames.astype(jnp.dtype(cfg.dtype)) @ params["src_proj"].astype(
+        jnp.dtype(cfg.dtype))
+    pos = jnp.arange(frames.shape[1])
+    x = x + _sinusoidal(pos, cfg.d_model)[None].astype(x.dtype)
+    positions = pos[None, :]
+
+    def body(h, lp):
+        y, _ = apply_attention(lp["attn"], cfg,
+                               rms_norm(lp["norm1"], h, cfg.norm_eps),
+                               positions=positions, causal=False)
+        h = h + y
+        h = h + apply_mlp(lp["mlp"], cfg, rms_norm(lp["norm2"], h, cfg.norm_eps))
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc"])
+    return rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_attn_cached(lp, cfg, h, cross_kv):
+    """Cross-attention against precomputed encoder K/V (perf iteration
+    N5: recomputing K/V projections against 1500 frames per decode step
+    made whisper decode useful-FLOPs ~0.001)."""
+    import math as _math
+    from .layers import _gqa_scores, _gqa_out
+    b, s, _ = h.shape
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"].astype(h.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(lp["cross_attn"]["q_norm"], q, cfg.norm_eps)
+    kh = cross_kv["k"].shape[2]
+    g = cfg.num_heads // kh
+    qg = q.reshape(b, s, kh, g, cfg.head_dim)
+    scores = _gqa_scores(qg, cross_kv["k"].astype(q.dtype)) \
+        / _math.sqrt(cfg.head_dim)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(p, cross_kv["v"].astype(p.dtype))
+    out = out.reshape(b, s, cfg.num_heads, cfg.head_dim).astype(h.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out,
+                      lp["cross_attn"]["wo"].astype(h.dtype))
+
+
+def _dec_block(lp, cfg, h, enc_out, positions, window, cache, cache_index,
+               cross_kv=None):
+    y, new_cache = apply_attention(
+        lp["self_attn"], cfg, rms_norm(lp["norm1"], h, cfg.norm_eps),
+        positions=positions, causal=True, window=window,
+        cache=cache, cache_index=cache_index)
+    h = h + y
+    hx = rms_norm(lp["norm_x"], h, cfg.norm_eps)
+    if cross_kv is not None:
+        y = _cross_attn_cached(lp, cfg, hx, cross_kv)
+    else:
+        y, _ = apply_attention(lp["cross_attn"], cfg, hx,
+                               positions=positions, kv_x=enc_out)
+    h = h + y
+    h = h + apply_mlp(lp["mlp"], cfg, rms_norm(lp["norm2"], h, cfg.norm_eps))
+    return h, new_cache
+
+
+def apply_encdec(params, cfg: ModelConfig, tokens, frames, *, window=None):
+    """Training forward: (B,S) tokens + (B,T,d_source) frames -> logits."""
+    enc_out = encode(params, cfg, frames)
+    x = embed_tokens(params["embed"], cfg, tokens)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    window = window if window is not None else cfg.sliding_window
+
+    def body(h, lp):
+        h, _ = _dec_block(lp, cfg, h, enc_out, positions, window, None, None)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec"])
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], cfg, x), jnp.zeros((), jnp.float32)
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    c = {"k": jnp.zeros((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+         "v": jnp.zeros((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dtype)}
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers, *x.shape)), c)
+
+
+def build_cross_cache(params, cfg: ModelConfig, enc_out):
+    """Precompute per-layer cross-attention K/V from the encoder output
+    once per request (stacked over decoder layers for the scan)."""
+    dt = enc_out.dtype
+
+    def one(lp):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out,
+                       lp["cross_attn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out,
+                       lp["cross_attn"]["wv"].astype(dt))
+        if cfg.qk_norm:
+            k = rms_norm(lp["cross_attn"]["k_norm"], k, cfg.norm_eps)
+        return {"k": k, "v": v}
+
+    return jax.vmap(one)(params["dec"])
+
+
+def decode_step_encdec(params, cfg: ModelConfig, tokens, enc_out, caches,
+                       cache_index, *, window=None, cross_kv=None):
+    """One decoder step with self-attn cache; cross-attn reads the
+    precomputed cross_kv if given, else recomputes K/V from enc_out."""
+    x = embed_tokens(params["embed"], cfg, tokens)
+    positions = jnp.full((tokens.shape[0], 1), cache_index, jnp.int32)
+    window = window if window is not None else cfg.sliding_window
+
+    def body(h, xs):
+        lp, cache, ckv = xs
+        h, new_cache = _dec_block(lp, cfg, h, enc_out, positions, window,
+                                  cache, cache_index, cross_kv=ckv)
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec"], caches, cross_kv))
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], cfg, x), new_caches

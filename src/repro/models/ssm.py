@@ -1,0 +1,199 @@
+"""Mamba2 mixer: SSD (state-space duality) chunked scan, pure JAX.
+
+Reference for the Pallas kernel in ``repro.kernels.ssd_scan``.  The block
+follows the canonical Mamba2 layout:
+
+  in_proj -> [z, x, B, C, dt]; causal conv over (x,B,C); SSD; gated
+  RMSNorm; out_proj.
+
+Decode keeps (conv_state, ssm_state) and runs the O(1) recurrence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import params as P
+from .config import ModelConfig, SSMConfig
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = ssm_dims(cfg)
+    proj_out = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+    ks = jax.random.split(key, 4)
+    # dt bias initialised so softplus(dt_bias) spans [dt_min, dt_max]
+    u = jax.random.uniform(ks[2], (n_heads,))
+    dt_init = jnp.exp(u * (math.log(s.dt_max) - math.log(s.dt_min))
+                      + math.log(s.dt_min))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inv softplus
+    p = {
+        "in_proj": jax.random.normal(ks[0], (d, proj_out)) / math.sqrt(d),
+        "conv_w": jax.random.normal(ks[1], (s.conv_width, conv_dim)) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,)),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,)),
+        "norm": jnp.ones((d_inner,)),
+        "out_proj": jax.random.normal(ks[3], (d_inner, d)) / math.sqrt(d_inner),
+    }
+    a = {
+        "in_proj": (P.EMBED, P.SSM_INNER),
+        "conv_w": (P.CONV, P.SSM_INNER),
+        "conv_b": (P.SSM_INNER,),
+        "dt_bias": (P.HEADS,),
+        "A_log": (P.HEADS,),
+        "D": (P.HEADS,),
+        "norm": (P.SSM_INNER,),
+        "out_proj": (P.SSM_INNER, P.EMBED),
+    }
+    return p, a
+
+
+def _segsum(x):
+    """x: (..., T) -> (..., T, T) cumulative segment sums, -inf above diag."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD: linear-time inter-chunk scan + quadratic intra-chunk.
+
+    x : (b, s, h, p)   dt: (b, s, h)   A: (h,) (negative)
+    B : (b, s, g, n)   C : (b, s, g, n)
+    Returns y (b, s, h, p), final_state (b, h, p, n).
+    """
+    b, s, h, pdim = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+    rep = h // g
+    xc = x.reshape(b, nc, chunk, h, pdim).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3).astype(jnp.float32)
+    Cc = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3).astype(jnp.float32)
+    dA = dtc * A[None, None, None, :]                  # (b,nc,l,h) log-decay
+    dA = jnp.moveaxis(dA, -1, 2)                       # (b,nc,h,l)
+    dA_cum = jnp.cumsum(dA, axis=-1)                   # (b,nc,h,l)
+    # intra-chunk (quadratic within chunk)
+    L = jnp.exp(_segsum(dA))                           # (b,nc,h,l,l)
+    xdt = xc * dtc[..., None]                          # dt-weighted inputs
+    y_diag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp", Cc, Bc, L, xdt)
+    # per-chunk end states
+    decay_end = jnp.exp(dA_cum[..., -1:] - dA_cum)     # (b,nc,h,l)
+    states = jnp.einsum("bclhn,bchl,bclhp->bchpn", Bc, decay_end, xdt)
+    # inter-chunk linear scan
+    chunk_decay = jnp.exp(dA_cum[..., -1])             # (b,nc,h)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, pdim, n), jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp                                  # (b,h,p,n), (b,h)
+        h_in = carry
+        h_out = dec[..., None, None] * h_in + st
+        return h_out, h_in
+
+    final, h_prev = jax.lax.scan(
+        step, initial_state,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                # (b,nc,h,p,n) state at chunk start
+    decay_in = jnp.exp(dA_cum)                         # (b,nc,h,l)
+    y_off = jnp.einsum("bclhn,bchpn,bchl->bclhp", Cc, h_prev, decay_in)
+    y = (y_diag + y_off).reshape(b, s, h, pdim)
+    return y.astype(x.dtype), final
+
+
+def _causal_conv(x, w, b):
+    """x: (B,S,C), w: (W,C) depthwise causal conv."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def apply_mamba(p, cfg: ModelConfig, u, *, state=None):
+    """u: (B,S,d_model) -> (y, new_state or None).
+
+    state: dict(conv=(B,W-1,conv_dim), ssm=(B,h,p,n)) for decode.
+    """
+    s_cfg = cfg.ssm
+    b, s, _ = u.shape
+    d_inner, n_heads, conv_dim = ssm_dims(cfg)
+    gn = s_cfg.n_groups * s_cfg.d_state
+    zxbcdt = u @ p["in_proj"].astype(u.dtype)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt_raw = zxbcdt[..., -n_heads:]
+    new_state = None
+    if state is not None:
+        # decode: s == 1; roll conv state
+        conv_in = jnp.concatenate([state["conv"], xbc], axis=1)
+        xbc_conv = jax.nn.silu(
+            jnp.einsum("bwc,wc->bc", conv_in, p["conv_w"].astype(u.dtype))
+            + p["conv_b"].astype(u.dtype))[:, None, :]
+        new_conv = conv_in[:, 1:]
+    else:
+        xbc_conv = jax.nn.silu(_causal_conv(
+            xbc, p["conv_w"].astype(u.dtype), p["conv_b"].astype(u.dtype)))
+    x = xbc_conv[..., :d_inner].reshape(b, s, n_heads, s_cfg.head_dim)
+    B = xbc_conv[..., d_inner:d_inner + gn].reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    C = xbc_conv[..., d_inner + gn:].reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])   # (b,s,h)
+    A = -jnp.exp(p["A_log"])                               # (h,) negative
+    if state is not None:
+        # O(1) recurrence for a single token
+        dA = jnp.exp(dt[:, 0] * A[None, :])                # (b,h)
+        rep = n_heads // s_cfg.n_groups
+        Bh = jnp.repeat(B[:, 0], rep, axis=1)              # (b,h,n)
+        Ch = jnp.repeat(C[:, 0], rep, axis=1)
+        xdt = x[:, 0].astype(jnp.float32) * dt[:, 0][..., None]  # (b,h,p)
+        ssm = state["ssm"] * dA[..., None, None] \
+            + xdt[..., None] * Bh[:, :, None, :]           # (b,h,p,n)
+        y = jnp.einsum("bhpn,bhn->bhp", ssm, Ch)
+        y = y[:, None].astype(u.dtype)                     # (b,1,h,p)
+        new_state = {"conv": new_conv, "ssm": ssm}
+        yf = y
+    else:
+        chunk = min(s_cfg.chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            x_, dt_ = (jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+                       for t in (x, dt))
+            B_, C_ = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                      for t in (B, C))
+        else:
+            x_, dt_, B_, C_ = x, dt, B, C
+        yf, final = ssd_chunked(x_, dt_, A, B_, C_, chunk)
+        yf = yf[:, :s]
+        new_state = None
+    yf = yf + x * p["D"].astype(yf.dtype)[None, None, :, None]
+    yf = yf.reshape(b, s, d_inner)
+    # gated RMSNorm (mamba2 style)
+    from .layers import rms_norm
+    yf = rms_norm(p["norm"], yf * jax.nn.silu(z), cfg.norm_eps)
+    return yf @ p["out_proj"].astype(u.dtype), new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = ssm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, n_heads, s.head_dim, s.d_state), jnp.float32),
+    }

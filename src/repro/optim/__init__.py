@@ -1,0 +1,3 @@
+from .adamw import adamw_init, adamw_update
+from .nesterov import nesterov_init, nesterov_update
+from .schedule import cosine_schedule

@@ -1,0 +1,42 @@
+"""AdamW — the paper's inner optimizer (§2.5, Table 4: wd=0.1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree_util.tree_map(jnp.zeros_like, zeros),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, grad_clip=1.0):
+    count = state["count"] + 1
+    if grad_clip is not None:
+        gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree_util.tree_leaves(grads))
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32) * scale, grads)
+    else:
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                               state["v"], grads)
+    c = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** c
+    bc2 = 1 - b2 ** c
+
+    def upd(p, m_, v_):
+        step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "count": count}

@@ -1,0 +1,31 @@
+"""Nesterov momentum — the paper's outer optimizer (§7.1: lr=0.7, mu=0.9).
+
+Operates on *outer gradients* Delta(l,e) = theta^{t-1} - avg_i theta_i^t
+(Algorithm 1, line 13-14)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def nesterov_init(params):
+    return {"momentum": jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)}
+
+
+def nesterov_update(outer_grads, state, params, *, lr=0.7, momentum=0.9,
+                    nesterov=True):
+    def upd(buf, g):
+        return momentum * buf + g.astype(jnp.float32)
+
+    new_buf = jax.tree_util.tree_map(upd, state["momentum"], outer_grads)
+
+    def step(p, buf, g):
+        if nesterov:
+            d = g.astype(jnp.float32) + momentum * buf
+        else:
+            d = buf
+        return (p.astype(jnp.float32) - lr * d).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(step, params, new_buf, outer_grads)
+    return new_params, {"momentum": new_buf}

@@ -1,0 +1,14 @@
+"""Cosine LR schedule with linear warmup (paper §4: peak 4e-4, 1k warmup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr=4e-4, warmup=1000, total_steps=88_000,
+                    final_frac=0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+    cos = final_frac * peak_lr + (1 - final_frac) * peak_lr * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, cos)

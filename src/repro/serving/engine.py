@@ -1,0 +1,128 @@
+"""Path-serving engine (paper §2.2/§2.6: "at test time, the paths are
+instantiated and served independently, with text routed to each path via
+a router").
+
+Requests are routed by prefix features to a path; each path island
+serves its batch with a KV/SSM cache.  Optional re-routing every W
+tokens (§2.4.3): on a path switch the new path's cache is rebuilt by
+re-prefilling the running text — the paper's §6 KV-recompute limitation,
+implemented honestly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.models.lm import apply_lm
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, prompt + new)
+    paths: np.ndarray           # (B,) final path per request
+    switches: int
+
+
+class PathServingEngine:
+    def __init__(self, cfg: ModelConfig, path_params_list, *, router=None,
+                 feat_params=None, cache_len: int = 512):
+        self.cfg = cfg
+        self.paths = path_params_list
+        self.router = router
+        self.feat_params = feat_params
+        self.cache_len = cache_len
+
+        cfg_ = cfg
+
+        @jax.jit
+        def _prefill(params, tokens):
+            """Forward the prompt, build the decode cache, return last
+            logits + cache."""
+            logits, _ = apply_lm(params, cfg_, tokens)
+            return logits[:, -1]
+
+        self._prefill_logits = _prefill
+
+        @jax.jit
+        def _decode(params, tok, cache, idx):
+            logits, cache = api.serve_step(
+                params, cfg_, {"tokens": tok}, cache, idx)
+            return logits[:, 0], cache
+
+        self._decode = _decode
+
+        @jax.jit
+        def _feats(tokens):
+            h, _ = apply_lm(feat_params if feat_params is not None
+                            else path_params_list[0], cfg_, tokens,
+                            return_hidden=True)
+            return jnp.mean(h.astype(jnp.float32), axis=1)
+
+        self._feats = _feats
+
+    # ------------------------------------------------------------------
+    def route(self, tokens) -> np.ndarray:
+        if self.router is None:
+            return np.zeros(tokens.shape[0], np.int32)
+        z = self._feats(jnp.asarray(tokens[:, :self.cfg.route_prefix_len]))
+        return np.asarray(self.router.assign(z))
+
+    def _build_cache(self, params, tokens):
+        """Prefill by replaying tokens through decode steps (keeps a
+        single compiled decode fn; fine at serving-demo scale)."""
+        b, s = tokens.shape
+        cache = api.init_serve_cache(self.cfg, b, self.cache_len)
+        logits = None
+        for t in range(s):
+            logits, cache = self._decode(params, tokens[:, t:t + 1], cache,
+                                         jnp.int32(t))
+        return logits, cache
+
+    # ------------------------------------------------------------------
+    def generate(self, prompts: np.ndarray, max_new: int, *,
+                 reroute_every: int = 0, greedy: bool = True,
+                 seed: int = 0) -> GenerationResult:
+        prompts = np.asarray(prompts)
+        b, s0 = prompts.shape
+        assign = self.route(prompts)
+        switches = 0
+        results = np.zeros((b, s0 + max_new), np.int32)
+        results[:, :s0] = prompts
+        final_paths = np.asarray(assign).copy()
+        for p in np.unique(assign):
+            sel = np.nonzero(assign == p)[0]
+            params = self.paths[int(p)]
+            # logits predicts the token at position `pos`
+            logits, cache = self._build_cache(
+                params, jnp.asarray(results[sel, :s0]))
+            cur_path = int(p)
+            pos = s0
+            for t in range(max_new):
+                nxt = jnp.argmax(logits, -1)   # greedy
+                results[sel, pos] = np.asarray(nxt, np.int32)
+                if (reroute_every and (t + 1) % reroute_every == 0
+                        and self.router is not None and t + 1 < max_new):
+                    z = self._feats(jnp.asarray(
+                        results[sel, max(0, pos - reroute_every + 1):pos + 1]))
+                    new_p = int(np.asarray(self.router.assign(z))[0])
+                    if new_p != cur_path:
+                        switches += 1
+                        cur_path = new_p
+                        params = self.paths[new_p]
+                        # §6 limitation: rebuild the cache on the new path
+                        logits, cache = self._build_cache(
+                            params, jnp.asarray(results[sel, :pos + 1]))
+                        pos += 1
+                        continue
+                logits, cache = self._decode(
+                    params, jnp.asarray(results[sel, pos:pos + 1]), cache,
+                    jnp.int32(pos))
+                pos += 1
+            final_paths[sel] = cur_path
+        return GenerationResult(tokens=results, paths=final_paths,
+                                switches=switches)

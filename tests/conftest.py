@@ -1,0 +1,36 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
+# the single real CPU device; only launch/dryrun.py forces 512 devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def tiny_corpus():
+    from repro.data import SyntheticCorpus
+    return SyntheticCorpus(vocab_size=512, num_domains=4, seq_len=64, seed=0)
+
+
+@pytest.fixture(scope="session")
+def tiny_docs(tiny_corpus):
+    docs, doms = tiny_corpus.sample_documents(256, return_domains=True)
+    return docs, doms
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    from repro.configs import get_smoke_config
+    return get_smoke_config("dipaco-150m").replace(route_prefix_len=8)
+
+
+@pytest.fixture(scope="session")
+def tiny_base(tiny_cfg):
+    from repro.models import api
+    return api.init_model(jax.random.PRNGKey(0), tiny_cfg)

@@ -1,0 +1,49 @@
+"""Collective parser: shapes, multipliers, while-loop trip counting."""
+from repro.launch.hlo_analysis import (collective_stats, roofline_terms,
+                                       _shape_bytes)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[2,3]") == 24
+    assert _shape_bytes("bf16[128]") == 256
+    assert _shape_bytes("(f32[2], bf16[4])") == 16
+    assert _shape_bytes("s32[]") == 4
+
+
+HLO = """
+HloModule test
+
+%region_body (x: f32[8]) -> f32[8] {
+  %ar = f32[8]{0} all-reduce(%x), replica_groups={}
+  ROOT %r = f32[8]{0} add(%ar, %ar)
+}
+
+%region_cond (x: s32[]) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%x, %c), direction=LT
+}
+
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %ag = f32[16]{0} all-gather(%p), replica_groups={}
+  %w = (s32[], f32[8]) while(%t), condition=%region_cond, body=%region_body
+  ROOT %out = f32[8]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_trip_count_multiplies_body_collectives():
+    stats = collective_stats(HLO)
+    # all-gather once (16*4 bytes), all-reduce 12x (8*4*2 bytes each)
+    assert stats["counts"]["all-gather"] == 1
+    assert stats["counts"]["all-reduce"] == 12
+    assert stats["bytes_by_op"]["all-gather"] == 64.0
+    assert stats["bytes_by_op"]["all-reduce"] == 12 * 8 * 4 * 2.0
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(total_flops=1e18, total_bytes=1e12,
+                       collective_bytes_per_device=1e9, chips=256)
+    assert t["dominant"] == "compute_s"
+    t2 = roofline_terms(total_flops=1e12, total_bytes=1e12,
+                        collective_bytes_per_device=1e12, chips=256)
+    assert t2["dominant"] == "collective_s"

@@ -1,0 +1,137 @@
+"""Infrastructure (§3): queue lease/requeue semantics, barrier, monitor,
+checkpoint DB, executor==vectorized equivalence, preemption robustness."""
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.infra import CheckpointDB, Task, TaskQueue, WorkerPool
+from repro.infra.task_queue import Barrier
+
+
+def test_queue_basic_flow():
+    q = TaskQueue()
+    q.put_many([Task("train", {"i": i}) for i in range(5)])
+    seen = []
+    while True:
+        t = q.fetch(timeout=0.1)
+        if t is None:
+            break
+        seen.append(t.payload["i"])
+        q.complete(t.task_id, t.payload["i"] * 2)
+    assert sorted(seen) == list(range(5))
+    assert q.stats()["done"] == 5
+    assert sorted(q.results().values()) == [0, 2, 4, 6, 8]
+
+
+def test_queue_lease_expiry_requeues():
+    q = TaskQueue(lease_seconds=0.1)
+    q.put(Task("train", {"i": 0}))
+    t1 = q.fetch(timeout=0.5)
+    assert t1 is not None
+    time.sleep(0.2)           # lease expires; worker presumed dead
+    t2 = q.fetch(timeout=0.5)
+    assert t2 is not None and t2.task_id == t1.task_id
+    assert t2.attempts == 2
+
+
+def test_queue_fail_requeues_until_max_attempts():
+    q = TaskQueue(max_attempts=3)
+    q.put(Task("train", {}))
+    for _ in range(3):
+        t = q.fetch(timeout=0.2)
+        q.fail(t.task_id, "boom")
+    assert q.fetch(timeout=0.1) is None
+    assert q.stats()["failed"] == 1
+
+
+def test_queue_snapshot_restore():
+    q = TaskQueue()
+    q.put_many([Task("train", {"i": i}) for i in range(3)])
+    q.fetch(timeout=0.1)      # one leased
+    blob = q.snapshot()
+    q2 = TaskQueue.restore(blob)
+    assert q2.stats()["pending"] == 3   # leased returns to pending
+
+
+def test_barrier():
+    b = Barrier(3)
+    results = []
+
+    def worker():
+        results.append(b.wait("phase0", timeout=5.0))
+
+    ts = [threading.Thread(target=worker) for _ in range(3)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert results == [True, True, True]
+
+
+def test_worker_pool_with_preemptions_completes_all():
+    q = TaskQueue(lease_seconds=5.0, max_attempts=50)
+    q.put_many([Task("w", {"i": i}) for i in range(20)])
+    done = []
+    pool = WorkerPool(q, lambda t: done.append(t.payload["i"]),
+                      num_workers=4, preempt_prob=0.4, seed=1).start()
+    assert q.join(timeout=30.0)
+    q.close()
+    pool.stop()
+    assert sorted(set(done)) == list(range(20))
+    assert pool.preemptions > 0
+
+
+def test_ckpt_db_roundtrip():
+    with tempfile.TemporaryDirectory() as root:
+        db = CheckpointDB(root)
+        tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+                "b": {"c": jnp.ones((4,))}}
+        row = db.write(tree, path_id=1, phase=0, step=5)
+        from repro.infra.ckpt_db import load_tree
+        back = load_tree(row.file, tree)
+        for x, y in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(back)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y))
+        assert db.rows(kind="train", phase=0)[0].step == 5
+        hits = db.wait_for(lambda r: r.path_id == 1, timeout=0.5)
+        assert hits
+
+
+@pytest.mark.slow
+def test_infra_equivalence_and_preemption(tiny_cfg, tiny_docs):
+    """The round-based infra trainer == vectorized Algorithm 1, under
+    preemptions and workers < paths."""
+    from repro.core.dipaco import DiPaCoTrainer
+    from repro.infra.trainer import InfraDiPaCoTrainer
+    from repro.data import shard_documents
+    from repro.models import api
+    from repro.models.config import DiPaCoConfig
+    docs, doms = tiny_docs
+    ds = shard_documents(docs, doms % 4, 4)
+    key = jax.random.PRNGKey(0)
+    base, _ = api.init_model(key, tiny_cfg)
+    dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=3)
+    tr1 = DiPaCoTrainer(tiny_cfg, dcfg, ds, key=key, base_params=base,
+                        batch_size=4, peak_lr=1e-3, warmup=10,
+                        total_steps=100)
+    with tempfile.TemporaryDirectory() as root:
+        tr2 = InfraDiPaCoTrainer(tiny_cfg, dcfg, ds, key=key,
+                                 ckpt_root=root, base_params=base,
+                                 batch_size=4, peak_lr=1e-3, warmup=10,
+                                 total_steps=100, num_workers=3,
+                                 preempt_prob=0.3)
+        m1 = tr1.run_phase()
+        m2 = tr2.run_phase()
+        assert abs(m1.mean_loss - m2["mean_loss"]) < 1e-5
+        m1 = tr1.run_phase()
+        m2 = tr2.run_phase()
+        assert abs(m1.mean_loss - m2["mean_loss"]) < 1e-4
+        for p in range(4):
+            a, b = tr1.path_params(p), tr2.path_params(p)
+            for x, y in zip(jax.tree_util.tree_leaves(a),
+                            jax.tree_util.tree_leaves(b)):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                           atol=5e-6)

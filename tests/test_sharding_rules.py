@@ -1,0 +1,60 @@
+"""Logical-axis -> PartitionSpec rules (duck-typed mesh, no devices)."""
+from types import SimpleNamespace
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import DEFAULT_RULES, spec_for
+
+MESH1 = SimpleNamespace(shape={"data": 16, "model": 16})
+MESH2 = SimpleNamespace(shape={"pod": 2, "data": 16, "model": 16})
+
+
+def test_worker_axis_single_pod():
+    s = spec_for(("worker", None, None), (16, 8, 4096), MESH1)
+    assert s == P("data", None, None)
+
+
+def test_worker_axis_multi_pod():
+    s = spec_for(("worker", None, None), (32, 8, 4096), MESH2)
+    assert s == P(("pod", "data"), None, None)
+
+
+def test_heads_shard_when_divisible():
+    s = spec_for(("embed", "heads", "head_dim"), (4096, 64, 128), MESH1)
+    assert s == P(None, "model", None)
+
+
+def test_heads_replicate_when_not_divisible():
+    # gemma: 8 heads on a 16-way model axis -> replicated (honest fallback)
+    s = spec_for(("embed", "heads", "head_dim"), (2048, 8, 256), MESH1)
+    assert s == P(None, None, None)
+
+
+def test_no_double_use_of_mesh_axis():
+    # expert takes "model"; expert_mlp must then stay unsharded
+    s = spec_for(("expert", "embed", "expert_mlp"), (128, 4096, 1536),
+                 MESH1)
+    assert s == P("model", None, None)
+
+
+def test_fallback_to_second_dim():
+    # 60 experts not divisible by 16 -> expert_mlp gets the model axis
+    s = spec_for(("expert", "embed", "expert_mlp"), (60, 2048, 1408), MESH1)
+    assert s == P(None, None, "model")
+
+
+def test_vocab_sharding():
+    s = spec_for(("vocab", "embed"), (151936, 4096), MESH1)
+    assert s == P("model", None)
+    # whisper's odd vocab replicates
+    s2 = spec_for(("vocab", "embed"), (51865, 512), MESH1)
+    assert s2 == P(None, None)
+
+
+def test_worker_plus_batch_no_conflict():
+    # stacked decode caches: worker gets (pod,data); batch then cannot
+    s = spec_for(("worker", "batch", "cache_seq", "kv_heads", "head_dim"),
+                 (32, 4, 32768, 4, 128), MESH2,
+                 rules={**DEFAULT_RULES, "cache_seq": ("model",)})
+    assert s == P(("pod", "data"), None, "model", None, None)

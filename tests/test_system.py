@@ -1,0 +1,150 @@
+"""End-to-end behaviour of the paper's system (replaces the scaffold
+placeholder): DiPaCo specialization beats a single path, DiLoCo
+collapse equals data-parallel-ish behaviour, serving engine consistency,
+and a miniature dry-run in a subprocess with placeholder devices."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dipaco import DiPaCoTrainer, diloco_config, flat_moe_config
+from repro.data import SyntheticCorpus, shard_documents
+from repro.models import api
+from repro.models.config import DiPaCoConfig
+
+
+@pytest.fixture(scope="module")
+def setup(tiny_cfg):
+    corpus = SyntheticCorpus(vocab_size=tiny_cfg.vocab_size, num_domains=4,
+                             seq_len=64, seed=0)
+    docs, doms = corpus.sample_documents(512, return_domains=True)
+    val, val_doms = corpus.sample_documents(128, seed=99,
+                                            return_domains=True)
+    key = jax.random.PRNGKey(0)
+    base, _ = api.init_model(key, tiny_cfg)
+    return corpus, docs, doms, val, val_doms, base
+
+
+@pytest.mark.slow
+def test_dipaco_specialization_beats_single_path(tiny_cfg, setup):
+    """Paths trained on domain shards reach lower routed eval NLL than
+    one identical-size model trained on everything (the paper's core
+    claim at miniature scale)."""
+    corpus, docs, doms, val, val_doms, base = setup
+    key = jax.random.PRNGKey(0)
+    # DiPaCo 2x2 with oracle-domain sharding
+    ds = shard_documents(docs, doms % 4, 4)
+    dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=20)
+    tr = DiPaCoTrainer(tiny_cfg, dcfg, ds, key=key, base_params=base,
+                       batch_size=8, peak_lr=3e-3, warmup=10,
+                       total_steps=400)
+    for _ in range(4):
+        tr.run_phase()
+    routed = tr.evaluate_routed(val, val_doms % 4)
+    # single model, same total steps on the union of data
+    ds1 = shard_documents(docs, np.zeros(len(docs), np.int32), 1)
+    tr1 = DiPaCoTrainer(tiny_cfg, DiPaCoConfig(levels=(1,), inner_steps=20),
+                        ds1, key=key, base_params=base, batch_size=8,
+                        peak_lr=3e-3, warmup=10, total_steps=400)
+    for _ in range(4):
+        tr1.run_phase()
+    single = tr1.evaluate_routed(val, np.zeros(len(val), np.int32))
+    assert routed["nll"] < single["nll"] + 0.05, (routed, single)
+
+
+@pytest.mark.slow
+def test_diloco_multiworker_converges_and_syncs(tiny_cfg, setup):
+    """DiLoCo mechanics: 4 workers on one shared module converge, stay
+    bit-identical after every outer step (module sync invariant), and
+    land in the same quality band as a single worker at equal steps.
+    (The 8x-compute *win* needs paper-scale steps — see benchmarks.)"""
+    corpus, docs, doms, val, _, base = setup
+    key = jax.random.PRNGKey(0)
+    ds4 = shard_documents(docs, np.arange(len(docs)) % 4, 4)
+    tr4 = DiPaCoTrainer(tiny_cfg,
+                        diloco_config(4, inner_steps=20,
+                                      grad_norm_rescale=False),
+                        ds4, key=key, base_params=base, batch_size=8,
+                        peak_lr=3e-3, warmup=10, total_steps=400)
+    m_first = tr4.run_phase()
+    for _ in range(2):
+        m_last = tr4.run_phase()
+    assert m_last.mean_loss < m_first.mean_loss
+    # all workers share the single module -> identical after outer step
+    w = tr4.worker_params
+    for leaf in jax.tree_util.tree_leaves(w):
+        np.testing.assert_allclose(np.asarray(leaf[0], np.float32),
+                                   np.asarray(leaf[3], np.float32),
+                                   atol=1e-6)
+    nll4 = tr4.eval_path(0, val[:64])
+    ds1 = shard_documents(docs, np.zeros(len(docs), np.int32), 1)
+    tr1 = DiPaCoTrainer(tiny_cfg, DiPaCoConfig(levels=(1,), inner_steps=20),
+                        ds1, key=key, base_params=base, batch_size=8,
+                        peak_lr=3e-3, warmup=10, total_steps=400)
+    for _ in range(3):
+        tr1.run_phase()
+    nll1 = tr1.eval_path(0, val[:64])
+    assert nll4 < nll1 + 0.5, (nll4, nll1)
+
+
+def test_flat_moe_config_is_fully_independent(tiny_cfg):
+    dcfg = flat_moe_config(4)
+    from repro.core.partition import make_partition, mixing_matrices
+    part = make_partition(dcfg, tiny_cfg.pattern_repeats)
+    mix, mix_s = mixing_matrices(part, np.arange(4), None,
+                                 grad_norm_rescale=False)
+    for r in range(mix.shape[0]):
+        np.testing.assert_allclose(mix[r], np.eye(4))
+    np.testing.assert_allclose(mix_s, np.eye(4))
+
+
+def test_serving_engine_generates(tiny_cfg, setup):
+    corpus, docs, doms, val, _, base = setup
+    from repro.serving import PathServingEngine
+    eng = PathServingEngine(tiny_cfg, [base, base], cache_len=64)
+    res = eng.generate(val[:2, :16], max_new=8)
+    assert res.tokens.shape == (2, 24)
+    assert (res.tokens[:, :16] == val[:2, :16]).all()
+    # greedy decode from the cache must equal greedy from full forward
+    from repro.models.lm import apply_lm
+    logits, _ = apply_lm(base, tiny_cfg, jnp.asarray(res.tokens[:, :16]))
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(logits[:, -1], -1), np.int32),
+        res.tokens[:, 16])
+
+
+@pytest.mark.slow
+def test_mini_dryrun_subprocess():
+    """8 placeholder devices; lower+compile a smoke arch train step on a
+    (4,2) mesh and check the collective stats are produced."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, jax
+from repro.configs import get_smoke_config
+from repro.launch import specs as SP
+from repro.launch.hlo_analysis import collective_stats
+from repro.models.config import InputShape
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+cfg = get_smoke_config("qwen3-moe-235b-a22b")
+shape = InputShape("t", 128, 8, "train")
+with mesh:
+    case = SP.build_train_case(cfg, shape, mesh)
+    compiled = jax.jit(case.fn).lower(*case.args).compile()
+    stats = collective_stats(compiled.as_text())
+print(json.dumps({"ok": True, "n_coll": stats["total_count"],
+                  "bytes": stats["total_bytes"]}))
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"]
