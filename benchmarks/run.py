@@ -7,6 +7,7 @@ packs the benchmark-specific result (PPL, ratios, notes) as
 from __future__ import annotations
 
 import argparse
+import math
 import sys
 import time
 
@@ -23,17 +24,30 @@ def _derived(row: dict) -> str:
     return "|".join(parts)
 
 
+# fast, CI-friendly subset exercising the kernel layer, the shared
+# training harness (common.setup) and the serving subsystem
+SMOKE_SUITES = ("kernels", "table2", "serving")
+
+
+def _finite(row: dict) -> bool:
+    return all(math.isfinite(v) for v in row.values()
+               if isinstance(v, (int, float)))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark module names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: fast suite subset; exit non-zero on "
+                         "any failure or non-finite metric")
     args = ap.parse_args()
     quick = not args.full
 
     from . import (fig8_convergence, fig9_path_scaling, fig11_alternating,
                    kernels_micro, outer_exec_scaling, roofline,
-                   sync_vs_diloco, table1_variants,
+                   serving_throughput, sync_vs_diloco, table1_variants,
                    table2_flatmoe_overfit, table3_eval_routing,
                    table5_sharding)
     suites = {
@@ -48,11 +62,19 @@ def main() -> None:
         "outer_exec": outer_exec_scaling,
         "kernels": kernels_micro,
         "roofline": roofline,
+        "serving": serving_throughput,
     }
+    if args.smoke:
+        suites = {k: suites[k] for k in SMOKE_SUITES}
     if args.only:
         names = args.only.split(",")
+        unknown = [n for n in names if n not in suites]
+        if unknown:
+            ap.error(f"unknown suite(s) {unknown}; "
+                     f"known: {sorted(suites)}")
         suites = {k: v for k, v in suites.items() if k in names}
 
+    failures = []
     print("name,us_per_call,derived")
     for name, mod in suites.items():
         t0 = time.time()
@@ -60,12 +82,19 @@ def main() -> None:
             rows = mod.run(quick=quick)
         except Exception as e:  # noqa: BLE001
             print(f"{name}_FAILED,0,error={type(e).__name__}: {e}")
+            failures.append(f"{name}: {type(e).__name__}: {e}")
             continue
         for r in rows:
+            if args.smoke and not _finite(r):
+                failures.append(f"{name}/{r['name']}: non-finite metric")
             print(f"{r['name']},{r.get('us_per_call', 0.0):.1f},"
                   f"{_derived(r)}")
         print(f"# {name} finished in {time.time() - t0:.1f}s",
               file=sys.stderr)
+    if args.smoke and failures:
+        for f in failures:
+            print(f"SMOKE FAILURE: {f}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
-"""Serve trained paths with batched requests and eval-time re-routing
-(paper §2.4.3 / Fig. 3).
+"""Serve trained paths with batched requests, eval-time re-routing
+(paper §2.4.3 / Fig. 3), and a continuous-batching engine absorbing a
+Poisson arrival trace.
 
     PYTHONPATH=src python examples/serve_paths.py
 """
@@ -9,12 +10,13 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.dipaco import DiPaCoTrainer
-from repro.core.routing import (kmeans_fit, prefix_features,
+from repro.core.routing import (prefix_features,
                                 train_discriminative_router)
 from repro.data import SyntheticCorpus, shard_documents
 from repro.models import api
 from repro.models.config import DiPaCoConfig
-from repro.serving import PathServingEngine
+from repro.serving import (ContinuousBatchingEngine, PathServingEngine,
+                           poisson_trace)
 
 
 def main():
@@ -56,6 +58,22 @@ def main():
     print("== re-route every 8 tokens during decode (§2.4.3)")
     res2 = engine.generate(prompts[:, :16], max_new=16, reroute_every=8)
     print(f"   path switches during generation: {res2.switches}")
+
+    print("== continuous batching: Poisson arrivals into slot arenas")
+    cont = ContinuousBatchingEngine(cfg, paths, router=router,
+                                    feat_params=base, cache_len=96,
+                                    slots_per_path=4, reroute_every=8)
+    trace = poisson_trace(16, rate=40.0, prompt_lens=(12, 16, 24),
+                          max_new=16, vocab_size=cfg.vocab_size, seed=11,
+                          corpus=corpus)
+    fins = cont.serve_trace(trace, realtime=True)
+    lat = sorted(f.latency for f in fins)
+    stats = cont.scheduler.stats
+    print(f"   served {len(fins)} requests in {cont.ticks} ticks "
+          f"(p50 latency {lat[len(lat) // 2] * 1e3:.0f}ms, "
+          f"switches {sum(f.switches for f in fins)})")
+    print(f"   admitted={stats.admitted} completed={stats.completed} "
+          f"backpressure_ticks={stats.backpressure_ticks}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 """Serving launcher: routes batched requests to path replicas.
 
     PYTHONPATH=src python -m repro.launch.serve --arch dipaco-150m \
-        --paths 4 --requests 8 --max-new 16 [--reroute-every 8]
+        --paths 4 --requests 8 --max-new 16 [--reroute-every 8] \
+        [--continuous --rate 40]
 """
 from __future__ import annotations
 
@@ -15,7 +16,8 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.models import api
 from repro.data import SyntheticCorpus
-from repro.serving import PathServingEngine
+from repro.serving import (ContinuousBatchingEngine, PathServingEngine,
+                           poisson_trace)
 
 
 def main() -> None:
@@ -26,6 +28,13 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--reroute-every", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching engine fed by a Poisson "
+                         "arrival trace instead of one synchronous batch")
+    ap.add_argument("--rate", type=float, default=40.0,
+                    help="Poisson arrival rate (req/s) for --continuous")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="cache slots per path island for --continuous")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).replace(route_prefix_len=8)
@@ -37,8 +46,29 @@ def main() -> None:
     for p in range(args.paths):
         params, _ = api.init_model(jax.random.fold_in(key, p), cfg)
         paths.append(params)
-    engine = PathServingEngine(
-        cfg, paths, cache_len=args.prompt_len + args.max_new)
+    cache_len = args.prompt_len + args.max_new
+    if args.continuous:
+        engine = ContinuousBatchingEngine(
+            cfg, paths, cache_len=cache_len, slots_per_path=args.slots,
+            reroute_every=args.reroute_every)
+        trace = poisson_trace(args.requests, rate=args.rate,
+                              prompt_lens=[args.prompt_len],
+                              max_new=args.max_new,
+                              vocab_size=cfg.vocab_size, seed=0,
+                              corpus=corpus)
+        t0 = time.time()
+        fins = engine.serve_trace(trace, realtime=True)
+        dt = time.time() - t0
+        toks = args.requests * args.max_new
+        lat = sorted(f.latency for f in fins)
+        print(f"[serve] {toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s) "
+              f"over {engine.ticks} ticks, "
+              f"p50 latency {lat[len(lat) // 2] * 1e3:.0f}ms, "
+              f"switches={sum(f.switches for f in fins)}")
+        print(f"[serve] request->path: "
+              f"{[f.path for f in sorted(fins, key=lambda f: f.rid)]}")
+        return
+    engine = PathServingEngine(cfg, paths, cache_len=cache_len)
     t0 = time.time()
     res = engine.generate(prompts, max_new=args.max_new,
                           reroute_every=args.reroute_every)

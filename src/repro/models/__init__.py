@@ -1,5 +1,5 @@
 from .config import (BlockSpec, DiPaCoConfig, EncoderConfig, InputShape,
                      INPUT_SHAPES, ModelConfig, MoEConfig, SSMConfig,
                      VisionStubConfig)
-from .api import (forward_logits, forward_loss, init_model, init_serve_cache,
-                  serve_step)
+from .api import (decode_step, forward_logits, forward_loss, init_model,
+                  init_serve_cache, prefill, serve_step)

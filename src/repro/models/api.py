@@ -5,11 +5,15 @@ All call sites (DiPaCo trainer, dry-run, serving, tests) go through:
   forward_loss(params, cfg, batch)-> (loss, aux)   batch: dict of arrays
   forward_logits(params, cfg, batch) -> logits
   init_serve_cache(cfg, batch, cache_len)
+  prefill(params, cfg, batch, cache_len) -> (logits, cache)
   serve_step(params, cfg, batch, cache, index) -> (logits, new_cache)
+
+``serve_step`` (alias ``decode_step``) accepts a scalar index or a (B,)
+vector of per-row positions, so a continuous-batching engine can decode
+a slot arena whose rows sit at different sequence offsets.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from .config import ModelConfig
@@ -51,6 +55,27 @@ def init_serve_cache(cfg: ModelConfig, batch: int, cache_len: int):
     return LM.init_decode_cache(cfg, batch, cache_len)
 
 
+def prefill(params, cfg: ModelConfig, batch, cache_len: int, *, window=None):
+    """Single-pass prompt ingestion -> (logits, decode-ready cache).
+
+    For decoder LMs this is one forward writing the cache at positions
+    0..S-1 (logits shape (B,S,V)).  Encoder-decoders fall back to a
+    sequential replay (logits shape (B,1,V)); in both cases
+    ``logits[:, -1]`` predicts the first generated token.
+    """
+    tokens = batch["tokens"]
+    if is_encdec(cfg):
+        cache = init_serve_cache(cfg, tokens.shape[0], cache_len)
+        logits = None
+        for t in range(tokens.shape[1]):
+            logits, cache = serve_step(
+                params, cfg, {**batch, "tokens": tokens[:, t:t + 1]},
+                cache, jnp.int32(t), window=window)
+        return logits, cache
+    return LM.prefill(params, cfg, tokens, cache_len, window=window,
+                      patch_embeds=batch.get("patch_embeds"))
+
+
 def serve_step(params, cfg: ModelConfig, batch, cache, index, *, window=None):
     """One-token decode.  batch: dict(tokens (B,1) [+ enc_out and/or
     precomputed cross_kv for enc-dec models])."""
@@ -61,3 +86,6 @@ def serve_step(params, cfg: ModelConfig, batch, cache, index, *, window=None):
                                      cross_kv=batch.get("cross_kv"))
     return LM.decode_step(params, cfg, batch["tokens"], cache, index,
                           window=window)
+
+
+decode_step = serve_step

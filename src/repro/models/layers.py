@@ -6,7 +6,6 @@ are pure.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional
 
@@ -196,10 +195,14 @@ def apply_attention(p, cfg: ModelConfig, x, *, positions, causal=True,
                     window=None, cache=None, cache_index=None, kv_x=None):
     """Multi-head attention with GQA/MQA, optional qk-norm & RoPE.
 
-    cache: optional dict(k=(B,T,KH,D), v=...) for decode; cache_index is the
-    write position (int32 scalar).  kv_x overrides key/value source
-    (cross-attention; no RoPE, no causal mask).
-    Returns (out, new_cache).
+    cache: optional dict(k=(B,T,KH,D), v=...) for decode/incremental
+    prefill; cache_index is the write position of the *first* token of
+    this call — an int32 scalar, or a (B,) vector when requests in the
+    batch sit at different positions (continuous batching).  Multi-token
+    calls (s > 1) write the block contiguously and mask causally within
+    it; the caller must ensure the block does not wrap the ring.
+    kv_x overrides key/value source (cross-attention; no RoPE, no causal
+    mask).  Returns (out, new_cache).
     """
     b, s, d_model = x.shape
     cross = kv_x is not None
@@ -217,7 +220,16 @@ def apply_attention(p, cfg: ModelConfig, x, *, positions, causal=True,
     if cache is not None and not cross:
         # decode / incremental: write k,v at cache_index (ring for windows)
         T = cache["k"].shape[1]
-        idx = cache_index % T
+        ci = jnp.broadcast_to(
+            jnp.asarray(cache_index, jnp.int32).reshape(-1), (b,))  # (B,)
+        idx = ci % T
+
+        def _row_update(buf, val, start):
+            """Per-row ring write: buf (B,T,...), val (B,s,...)."""
+            return jax.vmap(
+                lambda c, x_, i: jax.lax.dynamic_update_slice(
+                    c, x_, (i,) + (0,) * (c.ndim - 1)))(buf, val, start)
+
         if "k_scale" in cache:
             # int8 KV cache: per-(token, head) absmax scales — halves the
             # decode HBM traffic (§Perf iteration N7)
@@ -232,24 +244,18 @@ def apply_attention(p, cfg: ModelConfig, x, *, positions, causal=True,
 
             kq, ks = _quant(k)
             vq, vs = _quant(v)
-            ck = jax.lax.dynamic_update_slice(cache["k"], kq,
-                                              (0, idx, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cache["v"], vq,
-                                              (0, idx, 0, 0))
-            cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
-                                               (0, idx, 0))
-            cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs,
-                                               (0, idx, 0))
+            ck = _row_update(cache["k"], kq, idx)
+            cv = _row_update(cache["v"], vq, idx)
+            cks = _row_update(cache["k_scale"], ks, idx)
+            cvs = _row_update(cache["v_scale"], vs, idx)
             new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
             ckf = (ck.astype(jnp.float32)
                    * cks[..., None]).astype(q.dtype)
             cvf = (cv.astype(jnp.float32)
                    * cvs[..., None]).astype(q.dtype)
         else:
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+            ck = _row_update(cache["k"], k.astype(cache["k"].dtype), idx)
+            cv = _row_update(cache["v"], v.astype(cache["v"].dtype), idx)
             new_cache = {"k": ck, "v": cv}
             ckf, cvf = ck, cv
         # attend over valid cache entries
@@ -257,14 +263,20 @@ def apply_attention(p, cfg: ModelConfig, x, *, positions, causal=True,
         g = cfg.num_heads // kh
         qg = q.reshape(b, s, kh, g, cfg.head_dim)
         scores = _gqa_scores(qg, ckf.astype(q.dtype)) / math.sqrt(cfg.head_dim)
-        slot = jnp.arange(T)
-        # absolute position stored in each ring slot
-        abs_pos = jnp.where(slot <= idx, cache_index - idx + slot,
-                            cache_index - idx - T + slot)
-        valid = (abs_pos >= 0) & (abs_pos <= cache_index)
+        slot = jnp.arange(T)[None, :]                       # (1, T)
+        # absolute position stored in each ring slot, per batch row;
+        # reconstructed from the position of the *last* token written
+        last = ci + s - 1                                   # (B,)
+        idx_last = (last % T)[:, None]
+        abs_pos = jnp.where(slot <= idx_last,
+                            last[:, None] - idx_last + slot,
+                            last[:, None] - idx_last - T + slot)   # (B, T)
+        qpos = ci[:, None] + jnp.arange(s)[None, :]         # (B, S)
+        valid = ((abs_pos[:, None, :] >= 0)
+                 & (abs_pos[:, None, :] <= qpos[..., None]))       # (B, S, T)
         if window is not None:
-            valid &= abs_pos > cache_index - window
-        scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+            valid &= abs_pos[:, None, :] > qpos[..., None] - window
+        scores = jnp.where(valid[:, None, None, :, :], scores, NEG_INF)
         prob = jax.nn.softmax(scores, axis=-1)
         out = _gqa_out(prob, cvf.astype(prob.dtype))
         out = out.reshape(b, s, cfg.num_heads, cfg.head_dim).astype(x.dtype)

@@ -11,9 +11,6 @@ KV/SSM caches.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -22,7 +19,7 @@ from .config import ModelConfig
 from .layers import (apply_attention, apply_mlp, embed_tokens, init_attention,
                      init_embedding, init_mlp, init_rmsnorm, rms_norm, unembed)
 from .moe_layer import apply_moe, init_moe
-from .ssm import apply_mamba, init_mamba, init_ssm_state, ssm_dims
+from .ssm import apply_mamba, init_mamba, init_ssm_state
 
 
 # ---------------------------------------------------------------------------
@@ -84,7 +81,7 @@ def init_lm(key, cfg: ModelConfig):
 # Apply
 # ---------------------------------------------------------------------------
 def _apply_block(bp, cfg: ModelConfig, spec, x, *, positions, window,
-                 cache=None, cache_index=None):
+                 cache=None, cache_index=None, is_prefill=False):
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(bp["norm1"], x, cfg.norm_eps)
     new_cache = None
@@ -93,7 +90,12 @@ def _apply_block(bp, cfg: ModelConfig, spec, x, *, positions, window,
         y, new_cache = apply_attention(
             bp["mixer"], cfg, h, positions=positions, causal=True,
             window=window, cache=attn_cache, cache_index=cache_index)
-    else:  # mamba
+    elif is_prefill:
+        # mamba prefill: full-sequence scan from a zero state; the
+        # incoming (stale) slot state is overwritten, matching the
+        # attention branch's write-from-position-0 semantics
+        y, new_cache = apply_mamba(bp["mixer"], cfg, h, return_state=True)
+    else:  # mamba decode
         y, new_cache = apply_mamba(bp["mixer"], cfg, h, state=cache)
     x = x + y
     if spec.mlp != "none":
@@ -108,7 +110,7 @@ def _apply_block(bp, cfg: ModelConfig, spec, x, *, positions, window,
 
 
 def _scan_blocks(params, cfg: ModelConfig, x, *, positions, window,
-                 caches=None, cache_index=None):
+                 caches=None, cache_index=None, is_prefill=False):
     """Scan the repeating pattern group over ``pattern_repeats``."""
     reps = cfg.pattern_repeats
 
@@ -120,7 +122,8 @@ def _scan_blocks(params, cfg: ModelConfig, x, *, positions, window,
             c = None if bcaches is None else bcaches[f"pos{i}"]
             h, nc, a = _apply_block(
                 bparams[f"pos{i}"], cfg, spec, h, positions=positions,
-                window=window, cache=c, cache_index=cache_index)
+                window=window, cache=c, cache_index=cache_index,
+                is_prefill=is_prefill)
             aux = aux + a
             new_caches[f"pos{i}"] = nc
         if bcaches is None:
@@ -200,13 +203,45 @@ def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
 
 def decode_step(params, cfg: ModelConfig, tokens, caches, cache_index, *,
                 window=None):
-    """One decode step.  tokens: (B, 1) -> (logits (B,1,V), new_caches)."""
+    """One decode step.  tokens: (B, 1) -> (logits (B,1,V), new_caches).
+
+    cache_index: int32 scalar, or a (B,) vector when the batch rows sit
+    at different sequence positions (continuous batching over a slot
+    arena).
+    """
     x = _embed_inputs(params, cfg, tokens)
-    positions = jnp.full((tokens.shape[0], 1), cache_index, jnp.int32)
+    ci = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32).reshape(-1),
+                          (tokens.shape[0],))
+    positions = ci[:, None]
     window = window if window is not None else cfg.sliding_window
     x, aux, new_caches = _scan_blocks(
         params, cfg, x, positions=positions, window=window,
-        caches=caches, cache_index=cache_index)
+        caches=caches, cache_index=ci)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], cfg, x)
+    return logits, new_caches
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int, *,
+            window=None, patch_embeds=None):
+    """Single-pass prompt ingestion: forward ``tokens`` once, writing the
+    KV/SSM decode caches incrementally (positions 0..S-1).
+
+    Returns (logits (B,S,V), caches) — ``logits[:, -1]`` predicts the
+    first generated token and ``caches`` is ready for ``decode_step`` at
+    ``cache_index = S``.  Replaces the O(S) replay-through-decode loop
+    the one-shot serving engine uses.
+    """
+    b, s = tokens.shape
+    if s > cache_len:
+        raise ValueError(f"prompt length {s} exceeds cache_len {cache_len}")
+    caches = init_decode_cache(cfg, b, cache_len)
+    x = _embed_inputs(params, cfg, tokens, patch_embeds)
+    positions = jnp.arange(s)[None, :]
+    window = window if window is not None else cfg.sliding_window
+    x, aux, new_caches = _scan_blocks(
+        params, cfg, x, positions=positions, window=window,
+        caches=caches, cache_index=jnp.int32(0), is_prefill=True)
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = unembed(params["embed"], cfg, x)
     return logits, new_caches

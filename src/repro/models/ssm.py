@@ -11,13 +11,12 @@ Decode keeps (conv_state, ssm_state) and runs the O(1) recurrence.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from . import params as P
-from .config import ModelConfig, SSMConfig
+from .config import ModelConfig
 
 
 def ssm_dims(cfg: ModelConfig):
@@ -126,10 +125,12 @@ def _causal_conv(x, w, b):
     return out + b
 
 
-def apply_mamba(p, cfg: ModelConfig, u, *, state=None):
+def apply_mamba(p, cfg: ModelConfig, u, *, state=None, return_state=False):
     """u: (B,S,d_model) -> (y, new_state or None).
 
     state: dict(conv=(B,W-1,conv_dim), ssm=(B,h,p,n)) for decode.
+    return_state: on the full-sequence (prefill) path, also return the
+    state after the last token so decode can continue incrementally.
     """
     s_cfg = cfg.ssm
     b, s, _ = u.shape
@@ -181,7 +182,17 @@ def apply_mamba(p, cfg: ModelConfig, u, *, state=None):
             x_, dt_, B_, C_ = x, dt, B, C
         yf, final = ssd_chunked(x_, dt_, A, B_, C_, chunk)
         yf = yf[:, :s]
-        new_state = None
+        if return_state:
+            # chunk padding is state-exact: padded dt is 0, so padded
+            # steps neither decay nor inject input into `final`
+            W = s_cfg.conv_width
+            conv_tail = xbc[:, max(0, s - (W - 1)):s]
+            if s < W - 1:
+                conv_tail = jnp.pad(conv_tail,
+                                    ((0, 0), (W - 1 - s, 0), (0, 0)))
+            new_state = {"conv": conv_tail, "ssm": final}
+        else:
+            new_state = None
     yf = yf + x * p["D"].astype(yf.dtype)[None, None, :, None]
     yf = yf.reshape(b, s, d_inner)
     # gated RMSNorm (mamba2 style)

@@ -1,1 +1,4 @@
-from .engine import PathServingEngine
+from .cache import SlotArena, SlotExhausted
+from .engine import (ContinuousBatchingEngine, FinishedRequest,
+                     GenerationResult, PathServingEngine)
+from .scheduler import Request, Scheduler, poisson_trace

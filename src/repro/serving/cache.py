@@ -1,0 +1,102 @@
+"""Slot-pooled KV/SSM cache arena for continuous batching.
+
+One :class:`SlotArena` per path island (paper §2.2/§2.6: paths are
+instantiated and served independently).  The arena holds a single
+decode-cache pytree whose leading axis is ``num_slots``; a request
+occupies one slot row from admission to completion.  Allocation and
+free are O(1) host-side bookkeeping — cache buffers are written in
+place (row scatter), never rebuilt per request.
+
+Stale rows need no zeroing: the attention mask only admits ring entries
+whose reconstructed absolute position is in ``[0, current position]``,
+and a prefill overwrites positions ``0..S-1`` of its row, so a freshly
+allocated slot can never attend a previous occupant's keys.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+class SlotExhausted(Exception):
+    """Raised by :meth:`SlotArena.alloc` when no slot is free."""
+
+
+class SlotArena:
+    """Fixed-size pool of per-request cache slots for one path island."""
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, cache_len: int):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.cache = api.init_serve_cache(cfg, num_slots, cache_len)
+        self._free = list(range(num_slots - 1, -1, -1))
+        # per-slot next write position; parked at 0 while free so idle
+        # arena rows scribble only on position 0 (overwritten by the
+        # next prefill) during full-width decode ticks
+        self.positions = np.zeros(num_slots, np.int32)
+        self.active = np.zeros(num_slots, bool)
+
+        @jax.jit
+        def _write_rows(arena, rows, slots):
+            # cache leaves are layer-stacked: (reps, batch, ...) — the
+            # request/slot axis is axis 1
+            def one(a, r):
+                def body(i, acc):
+                    row = jax.lax.dynamic_index_in_dim(
+                        r, i, axis=1, keepdims=True)
+                    return jax.lax.dynamic_update_slice(
+                        acc, row.astype(acc.dtype),
+                        (0, slots[i]) + (0,) * (acc.ndim - 2))
+                return jax.lax.fori_loop(0, slots.shape[0], body, a)
+            return jax.tree_util.tree_map(one, arena, rows)
+
+        self._write_rows = _write_rows
+
+    # -- bookkeeping ---------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise SlotExhausted(f"all {self.num_slots} slots in use")
+        slot = self._free.pop()
+        self.active[slot] = True
+        self.positions[slot] = 0
+        return slot
+
+    def try_alloc(self):
+        """Like :meth:`alloc` but returns None instead of raising."""
+        try:
+            return self.alloc()
+        except SlotExhausted:
+            return None
+
+    def free(self, slot: int) -> None:
+        if not self.active[slot]:
+            raise ValueError(f"slot {slot} is not active")
+        self.active[slot] = False
+        self.positions[slot] = 0
+        self._free.append(slot)
+
+    # -- cache movement ------------------------------------------------
+    def write_slots(self, sub_cache, slots, positions) -> None:
+        """Scatter a batch-R cache pytree into arena rows ``slots``.
+
+        ``positions[i]`` is the number of valid tokens row ``i`` holds
+        (the next decode index for that request).
+        """
+        slots = np.asarray(slots, np.int32)
+        self.cache = self._write_rows(self.cache, sub_cache,
+                                      jnp.asarray(slots))
+        for s, p in zip(slots, np.asarray(positions, np.int32)):
+            self.positions[s] = p
+
+    def decode_indices(self) -> np.ndarray:
+        """(num_slots,) per-row cache_index vector for a decode tick."""
+        return self.positions.copy()

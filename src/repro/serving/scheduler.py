@@ -1,0 +1,135 @@
+"""Request admission + per-path queues for the continuous-batching engine.
+
+Requests enter a global admission queue, are routed once (prefix
+features -> path, paper §2.4.2) and then wait in their path island's
+queue until the island's slot arena has a free slot (backpressure).
+The scheduler is deliberately host-side and tick-synchronous: the
+engine calls :meth:`admissions` once per tick and gets, per path, the
+batch of requests to prefill this tick.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One generation request."""
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int
+    arrival: float = 0.0          # trace timestamp (seconds)
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+
+
+@dataclass
+class RequestState:
+    """Engine-internal in-flight state for an admitted request."""
+    req: Request
+    path: int
+    slot: int
+    tokens: List[int]             # prompt + generated so far
+    next_logits: Optional[np.ndarray] = None  # predicts tokens[len(tokens)]
+    switches: int = 0
+    prefilled_this_tick: bool = False
+    admitted_at: float = 0.0
+
+    @property
+    def emitted(self) -> int:
+        return len(self.tokens) - len(self.req.prompt)
+
+    @property
+    def done(self) -> bool:
+        return self.emitted >= self.req.max_new
+
+
+@dataclass
+class SchedulerStats:
+    submitted: int = 0
+    admitted: int = 0
+    completed: int = 0
+    backpressure_ticks: int = 0   # ticks where a request waited on a slot
+
+
+class Scheduler:
+    """FIFO admission queue + per-path wait queues with slot backpressure."""
+
+    def __init__(self, num_paths: int):
+        self.num_paths = num_paths
+        self._arrivals: deque = deque()
+        self._path_queues: Dict[int, deque] = {
+            p: deque() for p in range(num_paths)}
+        self.stats = SchedulerStats()
+
+    def submit(self, req: Request) -> None:
+        self.stats.submitted += 1
+        self._arrivals.append(req)
+
+    @property
+    def pending(self) -> int:
+        return (len(self._arrivals)
+                + sum(len(q) for q in self._path_queues.values()))
+
+    def route_arrivals(self, route_fn) -> None:
+        """Assign every queued arrival to a path island.
+
+        route_fn: (prompt (S,) int32) -> int path id.
+        """
+        while self._arrivals:
+            req = self._arrivals.popleft()
+            self._path_queues[int(route_fn(req.prompt))].append(req)
+
+    def admissions(self, free_slots_per_path) -> Dict[int, List[Request]]:
+        """Pop up to ``free_slots_per_path[p]`` requests per path queue.
+
+        Requests left waiting because their island is out of slots are
+        counted as backpressure.
+        """
+        out: Dict[int, List[Request]] = {}
+        starved = 0
+        for p, q in self._path_queues.items():
+            budget = int(free_slots_per_path.get(p, 0))
+            batch = []
+            while q and len(batch) < budget:
+                batch.append(q.popleft())
+            starved += len(q)
+            if batch:
+                self.stats.admitted += len(batch)
+                out[p] = batch
+        if starved:
+            self.stats.backpressure_ticks += 1
+        return out
+
+    def record_completion(self, n: int = 1) -> None:
+        self.stats.completed += n
+
+
+def poisson_trace(n: int, *, rate: float, prompt_lens, max_new: int,
+                  vocab_size: int, seed: int = 0,
+                  corpus=None) -> List[Request]:
+    """Sample ``n`` requests with Poisson arrivals and mixed prompt lengths.
+
+    prompt_lens: sequence of lengths sampled uniformly (a few discrete
+    buckets keeps the number of prefill compilations bounded).  Prompts
+    come from ``corpus.sample_documents`` when given, else uniform
+    random tokens.
+    """
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be > 0, got {rate}")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    arrivals = np.cumsum(gaps)
+    lens = rng.choice(np.asarray(prompt_lens), size=n)
+    if corpus is not None:
+        docs = corpus.sample_documents(n, seed=seed)
+    else:
+        docs = rng.integers(0, vocab_size, size=(n, int(max(prompt_lens))))
+    return [Request(rid=i, prompt=np.asarray(docs[i][:lens[i]], np.int32),
+                    max_new=max_new, arrival=float(arrivals[i]))
+            for i in range(n)]

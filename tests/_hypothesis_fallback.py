@@ -1,0 +1,83 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+The tier-1 suite property-tests with hypothesis when it is installed
+(CI pins it), but the library is optional: when missing, this shim runs
+each ``@given`` test on a small deterministic sample of the strategy
+space (range endpoints + seeded draws) instead of failing at collection.
+
+Only the strategy surface actually used by the test suite is
+implemented: ``integers``, ``sampled_from``, ``booleans``, ``none``,
+``one_of``.
+"""
+from __future__ import annotations
+
+import random
+
+FALLBACK_EXAMPLES = 5
+
+
+class _Strategy:
+    """A strategy is just a list of boundary examples + a sampler."""
+
+    def __init__(self, examples, sample=None):
+        self.examples = list(examples)
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        if self._sample is not None:
+            return self._sample(rng)
+        return rng.choice(self.examples)
+
+
+class strategies:  # noqa: N801 - mimics the ``hypothesis.strategies`` module
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy([min_value, max_value],
+                         sample=lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        return _Strategy(list(elements))
+
+    @staticmethod
+    def booleans():
+        return _Strategy([False, True])
+
+    @staticmethod
+    def none():
+        return _Strategy([None])
+
+    @staticmethod
+    def one_of(*strats):
+        def _sample(rng):
+            return rng.choice(strats).sample(rng)
+        return _Strategy([s.examples[0] for s in strats], sample=_sample)
+
+
+def settings(**_kwargs):
+    """No-op decorator: example budget is fixed in the fallback."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(**strats):
+    """Run the test on deterministic draws from each strategy.
+
+    The first example pins every strategy to its first boundary value;
+    the remaining runs are seeded random draws, so failures reproduce.
+    """
+    keys = sorted(strats)
+
+    def deco(fn):
+        # NOTE: no functools.wraps here — pytest must see a zero-arg
+        # signature, not the strategy parameters (they aren't fixtures)
+        def wrapper():
+            rng = random.Random(0)
+            fn(**{k: strats[k].examples[0] for k in keys})
+            for _ in range(FALLBACK_EXAMPLES - 1):
+                fn(**{k: strats[k].sample(rng) for k in keys})
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

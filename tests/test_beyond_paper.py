@@ -39,6 +39,7 @@ def test_cross_kv_cache_decode_exact():
                                    atol=1e-5)
 
 
+@pytest.mark.slow
 def test_async_quorum_executors_converge(tiny_cfg, tiny_docs):
     """Async outer updates (quorum 0.5): more frequent module updates,
     training still converges; stragglers fold into the next window."""
@@ -63,6 +64,7 @@ def test_async_quorum_executors_converge(tiny_cfg, tiny_docs):
         assert m0["outer_updates"] >= 5
 
 
+@pytest.mark.slow
 def test_quorum_one_equals_sync(tiny_cfg, tiny_docs):
     """quorum=1.0 matches the synchronous executors (up to float
     accumulation order, which depends on checkpoint arrival order)."""

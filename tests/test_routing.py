@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: deterministic fallback examples
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.routing import (kmeans_assign, kmeans_fit,
                                 product_kmeans_assign, product_kmeans_fit,
