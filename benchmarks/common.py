@@ -29,6 +29,27 @@ SEQ = 64
 NUM_DOMAINS = 8
 PREFIX = 8
 
+BENCH_DECODE_PATH = "BENCH_decode.json"
+
+
+def record_bench(section: str, rows, path: str = BENCH_DECODE_PATH) -> None:
+    """Merge a benchmark section into the perf-trajectory JSON so future
+    PRs have numbers to regress against."""
+    import json
+    import os
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+    data[section] = {"recorded_at": time.strftime("%Y-%m-%d %H:%M:%S"),
+                     "rows": rows}
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+
 
 @functools.lru_cache(maxsize=1)
 def setup(quick: bool = True):

@@ -25,13 +25,23 @@ def _derived(row: dict) -> str:
 
 
 # fast, CI-friendly subset exercising the kernel layer, the shared
-# training harness (common.setup) and the serving subsystem
-SMOKE_SUITES = ("kernels", "table2", "serving")
+# training harness (common.setup), the serving subsystem and the
+# decode hot path
+SMOKE_SUITES = ("kernels", "table2", "serving", "decode")
+
+# suites whose metrics must additionally be non-zero under --smoke (a
+# zero decode latency / tokens-per-second means the measurement broke)
+POSITIVE_SUITES = ("decode",)
 
 
 def _finite(row: dict) -> bool:
     return all(math.isfinite(v) for v in row.values()
                if isinstance(v, (int, float)))
+
+
+def _positive(row: dict) -> bool:
+    return all(v > 0 for v in row.values()
+               if isinstance(v, (int, float)) and not isinstance(v, bool))
 
 
 def main() -> None:
@@ -45,11 +55,11 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (fig8_convergence, fig9_path_scaling, fig11_alternating,
-                   kernels_micro, outer_exec_scaling, roofline,
-                   serving_throughput, sync_vs_diloco, table1_variants,
-                   table2_flatmoe_overfit, table3_eval_routing,
-                   table5_sharding)
+    from . import (decode_step_latency, fig8_convergence, fig9_path_scaling,
+                   fig11_alternating, kernels_micro, outer_exec_scaling,
+                   roofline, serving_throughput, sync_vs_diloco,
+                   table1_variants, table2_flatmoe_overfit,
+                   table3_eval_routing, table5_sharding)
     suites = {
         "table1": table1_variants,
         "table2": table2_flatmoe_overfit,
@@ -63,6 +73,7 @@ def main() -> None:
         "kernels": kernels_micro,
         "roofline": roofline,
         "serving": serving_throughput,
+        "decode": decode_step_latency,
     }
     if args.smoke:
         suites = {k: suites[k] for k in SMOKE_SUITES}
@@ -87,6 +98,9 @@ def main() -> None:
         for r in rows:
             if args.smoke and not _finite(r):
                 failures.append(f"{name}/{r['name']}: non-finite metric")
+            if (args.smoke and name in POSITIVE_SUITES
+                    and not _positive(r)):
+                failures.append(f"{name}/{r['name']}: zero metric")
             print(f"{r['name']},{r.get('us_per_call', 0.0):.1f},"
                   f"{_derived(r)}")
         print(f"# {name} finished in {time.time() - t0:.1f}s",

@@ -63,6 +63,7 @@ def main():
     cont = ContinuousBatchingEngine(cfg, paths, router=router,
                                     feat_params=base, cache_len=96,
                                     slots_per_path=4, reroute_every=8)
+    cont.warmup()   # pre-compile the bounded (bucket, batch) jit set
     trace = poisson_trace(16, rate=40.0, prompt_lens=(12, 16, 24),
                           max_new=16, vocab_size=cfg.vocab_size, seed=11,
                           corpus=corpus)

@@ -1,0 +1,160 @@
+"""Fused flash-decode attention (TPU Pallas): single-token GQA over the
+ring KV cache.
+
+DiPaCo serves each input on one cheap path (§2.2/§2.6), so per-token
+decode on a path *is* the serving cost model.  This kernel replaces the
+dense ``(B, H, S, T)`` masked-einsum cache branch of
+``models/layers.py::apply_attention`` for the ``s == 1`` decode case:
+
+* **split-K online softmax** — the innermost grid axis walks key blocks
+  of the cache-length axis sequentially, carrying (m, l, acc) in VMEM
+  scratch, so no ``(B, H, T)`` score tensor is ever materialized;
+* **in-kernel ring/window masking** — per-row ``cache_index`` arrives
+  via scalar prefetch (SMEM) and the absolute position of every ring
+  slot is reconstructed inside the kernel, masking unwritten slots,
+  causally-future slots and window-expired slots; fully-invalid key
+  blocks skip their matmuls entirely (``pl.when``);
+* **fused int8 dequantization** — with a quantized cache
+  (``cfg.kv_quant``) the int8 K/V blocks and their per-(token, head)
+  scales are dequantized in VMEM right before the dot, so the quantized
+  cache never round-trips through an f32 HBM materialization.
+
+Target: TPU v5e.  VMEM working set per grid step is one q group
+``(G, D)`` plus one K and one V block ``(block_k, D)`` (int8 or f32)
+plus scratch — comfortably under budget for ``D <= 256``.  On CPU CI
+the kernel runs in interpret mode (see ``ops.decode_attention``).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(ci_ref, q_ref, k_ref, v_ref, *rest,
+                   quantized: bool, T: int, block_k: int, nk: int,
+                   window: Optional[int], scale: float):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
+    bi = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # ring-slot validity, reconstructed from this row's decode position:
+    # the token at position ci sits in slot ci % T; slots "after" it in
+    # ring order hold entries T positions older (or nothing yet).
+    ci = ci_ref[bi]
+    slot = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_k,), 0)
+    idx_last = ci % T
+    abs_pos = jnp.where(slot <= idx_last, ci - idx_last + slot,
+                        ci - idx_last - T + slot)
+    valid = (abs_pos >= 0) & (abs_pos <= ci)
+    if window is not None:
+        valid &= abs_pos > ci - window
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[None, :], s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _write():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def _pick_block_k(T: int, block_k: int) -> int:
+    bk = min(block_k, T)
+    while T % bk:
+        bk //= 2
+    return max(bk, 1)
+
+
+def flash_decode(q, k_cache, v_cache, cache_index, *,
+                 window: Optional[int] = None, k_scale=None, v_scale=None,
+                 block_k: int = 128, interpret: bool = False):
+    """Single-token decode attention over a ring KV cache.
+
+    q: (B, H, D) — the current token's queries (RoPE already applied).
+    k_cache, v_cache: (B, T, KH, D) ring caches, f32/bf16 — or int8 with
+    ``k_scale``/``v_scale`` (B, T, KH) per-(token, head) scales.
+    cache_index: (B,) int32 — each row's decode position (the position
+    the current token was just written at; masking admits ring entries
+    with absolute position in ``[max(0, ci-window+1), ci]``).
+
+    Returns (B, H, D) in q's dtype.
+    """
+    b, h, d = q.shape
+    T, kh = k_cache.shape[1], k_cache.shape[2]
+    assert h % kh == 0, (h, kh)
+    g = h // kh
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None)
+    bk = _pick_block_k(T, block_k)
+    nk = T // bk
+    qg = q.reshape(b, kh, g, d)
+    ci = jnp.asarray(cache_index, jnp.int32).reshape(b)
+    kernel = functools.partial(
+        _decode_kernel, quantized=quantized, T=T, block_k=bk, nk=nk,
+        window=window, scale=1.0 / math.sqrt(d))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda bi, hi, j, ci: (bi, hi, 0, 0)),
+        pl.BlockSpec((1, bk, 1, d), lambda bi, hi, j, ci: (bi, j, hi, 0)),
+        pl.BlockSpec((1, bk, 1, d), lambda bi, hi, j, ci: (bi, j, hi, 0)),
+    ]
+    args = [qg, k_cache, v_cache]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, bk, 1), lambda bi, hi, j, ci: (bi, j, hi)),
+            pl.BlockSpec((1, bk, 1), lambda bi, hi, j, ci: (bi, j, hi)),
+        ]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, hi, j, ci: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        interpret=interpret,
+    )(ci, *args)
+    return out.reshape(b, h, d)

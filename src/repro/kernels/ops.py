@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .decode_attention import flash_decode as _flash_decode
 from .flash_attention import flash_attention as _flash
 from .moe_gmm import expert_gemm as _gemm
 from .router_assign import router_assign as _assign
@@ -29,6 +30,20 @@ def flash_attention(q, k, v, *, causal=True, window=None, block_q=128,
     interpret = _default_interpret() if interpret is None else interpret
     return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
                   block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k",
+                                             "interpret"))
+def decode_attention(q, k_cache, v_cache, cache_index, *, window=None,
+                     k_scale=None, v_scale=None, block_k=128,
+                     interpret=None):
+    """Flash-decode: single-token GQA attention over the ring KV cache
+    (split-K online softmax, in-kernel ring/window masking, fused int8
+    dequant).  q: (B, H, D); caches (B, T, KH, D); cache_index (B,)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash_decode(q, k_cache, v_cache, cache_index, window=window,
+                         k_scale=k_scale, v_scale=v_scale, block_k=block_k,
+                         interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",

@@ -13,6 +13,35 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None):
     return full_attention(q, k, v, causal=causal, window=window)
 
 
+def flash_decode_ref(q, k_cache, v_cache, cache_index, *, window=None,
+                     k_scale=None, v_scale=None):
+    """Dense oracle for kernels.decode_attention: single-token GQA over
+    a ring cache with per-row positions and optional int8 KV scales."""
+    NEG_INF = -1e30
+    b, h, d = q.shape
+    T, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    ci = jnp.asarray(cache_index, jnp.int32).reshape(b)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale.astype(jnp.float32)[..., None]
+        vf = vf * v_scale.astype(jnp.float32)[..., None]
+    qg = q.reshape(b, kh, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, kf) / math.sqrt(d)
+    slot = jnp.arange(T)[None, :]
+    idx_last = (ci % T)[:, None]
+    abs_pos = jnp.where(slot <= idx_last, ci[:, None] - idx_last + slot,
+                        ci[:, None] - idx_last - T + slot)     # (B, T)
+    valid = (abs_pos >= 0) & (abs_pos <= ci[:, None])
+    if window is not None:
+        valid &= abs_pos > ci[:, None] - window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, vf)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
 def router_assign_ref(z, centroids):
     z = z.astype(jnp.float32)
     c = centroids.astype(jnp.float32)

@@ -11,6 +11,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import params as P
 from .config import ModelConfig
@@ -222,6 +223,23 @@ def apply_attention(p, cfg: ModelConfig, x, *, positions, causal=True,
         T = cache["k"].shape[1]
         ci = jnp.broadcast_to(
             jnp.asarray(cache_index, jnp.int32).reshape(-1), (b,))  # (B,)
+        if s > 1:
+            # multi-token (prefill) blocks are written contiguously — a
+            # block that wraps the ring would silently overwrite its own
+            # oldest entries, so reject it loudly while the start
+            # positions are still concrete (they are for every prefill
+            # call site: prefill always starts at 0 with s <= T).
+            if s > T:
+                raise ValueError(
+                    f"multi-token cache write of {s} tokens exceeds "
+                    f"cache length {T}")
+            if not isinstance(ci, jax.core.Tracer):
+                starts = np.asarray(ci) % T
+                if int(starts.max()) + s > T:
+                    raise ValueError(
+                        f"multi-token cache write wraps the ring: start "
+                        f"{int(starts.max())} + {s} tokens > cache "
+                        f"length {T}; split the block or grow the cache")
         idx = ci % T
 
         def _row_update(buf, val, start):
@@ -249,37 +267,57 @@ def apply_attention(p, cfg: ModelConfig, x, *, positions, causal=True,
             cks = _row_update(cache["k_scale"], ks, idx)
             cvs = _row_update(cache["v_scale"], vs, idx)
             new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
-            ckf = (ck.astype(jnp.float32)
-                   * cks[..., None]).astype(q.dtype)
-            cvf = (cv.astype(jnp.float32)
-                   * cvs[..., None]).astype(q.dtype)
         else:
             ck = _row_update(cache["k"], k.astype(cache["k"].dtype), idx)
             cv = _row_update(cache["v"], v.astype(cache["v"].dtype), idx)
             new_cache = {"k": ck, "v": cv}
-            ckf, cvf = ck, cv
-        # attend over valid cache entries
-        kh = ck.shape[2]
-        g = cfg.num_heads // kh
-        qg = q.reshape(b, s, kh, g, cfg.head_dim)
-        scores = _gqa_scores(qg, ckf.astype(q.dtype)) / math.sqrt(cfg.head_dim)
-        slot = jnp.arange(T)[None, :]                       # (1, T)
-        # absolute position stored in each ring slot, per batch row;
-        # reconstructed from the position of the *last* token written
-        last = ci + s - 1                                   # (B,)
-        idx_last = (last % T)[:, None]
-        abs_pos = jnp.where(slot <= idx_last,
-                            last[:, None] - idx_last + slot,
-                            last[:, None] - idx_last - T + slot)   # (B, T)
-        qpos = ci[:, None] + jnp.arange(s)[None, :]         # (B, S)
-        valid = ((abs_pos[:, None, :] >= 0)
-                 & (abs_pos[:, None, :] <= qpos[..., None]))       # (B, S, T)
-        if window is not None:
-            valid &= abs_pos[:, None, :] > qpos[..., None] - window
-        scores = jnp.where(valid[:, None, None, :, :], scores, NEG_INF)
-        prob = jax.nn.softmax(scores, axis=-1)
-        out = _gqa_out(prob, cvf.astype(prob.dtype))
-        out = out.reshape(b, s, cfg.num_heads, cfg.head_dim).astype(x.dtype)
+        if s == 1 and cfg.attn_impl == "pallas":
+            # NOTE (perf iteration #3, fused decode path): the jnp branch
+            # below materializes dense (B, H, S, T) scores over the whole
+            # ring cache — and, for int8 caches, an f32 copy of the full
+            # cache — every decode step.  The Pallas flash-decode kernel
+            # streams the cache block-by-block with online softmax,
+            # masks ring validity in-kernel from the per-row positions,
+            # and dequantizes int8 KV in VMEM, so decode HBM traffic is
+            # one pass over the (possibly int8) cache.
+            from repro.kernels.ops import decode_attention as _pallas_decode
+            out = _pallas_decode(
+                q[:, 0], ck, cv, ci, window=window,
+                k_scale=new_cache.get("k_scale"),
+                v_scale=new_cache.get("v_scale"))
+            out = out[:, None].astype(x.dtype)              # (B, 1, H, D)
+        else:
+            if "k_scale" in new_cache:
+                ckf = (ck.astype(jnp.float32)
+                       * cks[..., None]).astype(q.dtype)
+                cvf = (cv.astype(jnp.float32)
+                       * cvs[..., None]).astype(q.dtype)
+            else:
+                ckf, cvf = ck, cv
+            # attend over valid cache entries
+            kh = ck.shape[2]
+            g = cfg.num_heads // kh
+            qg = q.reshape(b, s, kh, g, cfg.head_dim)
+            scores = (_gqa_scores(qg, ckf.astype(q.dtype))
+                      / math.sqrt(cfg.head_dim))
+            slot = jnp.arange(T)[None, :]                   # (1, T)
+            # absolute position stored in each ring slot, per batch row;
+            # reconstructed from the position of the *last* token written
+            last = ci + s - 1                               # (B,)
+            idx_last = (last % T)[:, None]
+            abs_pos = jnp.where(slot <= idx_last,
+                                last[:, None] - idx_last + slot,
+                                last[:, None] - idx_last - T + slot)  # (B,T)
+            qpos = ci[:, None] + jnp.arange(s)[None, :]     # (B, S)
+            valid = ((abs_pos[:, None, :] >= 0)
+                     & (abs_pos[:, None, :] <= qpos[..., None]))   # (B,S,T)
+            if window is not None:
+                valid &= abs_pos[:, None, :] > qpos[..., None] - window
+            scores = jnp.where(valid[:, None, None, :, :], scores, NEG_INF)
+            prob = jax.nn.softmax(scores, axis=-1)
+            out = _gqa_out(prob, cvf.astype(prob.dtype))
+            out = out.reshape(b, s, cfg.num_heads,
+                              cfg.head_dim).astype(x.dtype)
     else:
         causal_eff = causal and not cross
         if cfg.attn_impl == "pallas" and causal_eff:

@@ -1,4 +1,4 @@
-from .cache import SlotArena, SlotExhausted
+from .cache import SlotArena, SlotExhausted, StackedSlotArenas
 from .engine import (ContinuousBatchingEngine, FinishedRequest,
                      GenerationResult, PathServingEngine)
 from .scheduler import Request, Scheduler, poisson_trace

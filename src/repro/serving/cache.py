@@ -41,7 +41,6 @@ class SlotArena:
         self.positions = np.zeros(num_slots, np.int32)
         self.active = np.zeros(num_slots, bool)
 
-        @jax.jit
         def _write_rows(arena, rows, slots):
             # cache leaves are layer-stacked: (reps, batch, ...) — the
             # request/slot axis is axis 1
@@ -55,7 +54,9 @@ class SlotArena:
                 return jax.lax.fori_loop(0, slots.shape[0], body, a)
             return jax.tree_util.tree_map(one, arena, rows)
 
-        self._write_rows = _write_rows
+        # the arena buffers are donated: row scatters update in place
+        # instead of copying the whole pool every admission
+        self._write_rows = jax.jit(_write_rows, donate_argnums=0)
 
     # -- bookkeeping ---------------------------------------------------
     @property
@@ -99,4 +100,123 @@ class SlotArena:
 
     def decode_indices(self) -> np.ndarray:
         """(num_slots,) per-row cache_index vector for a decode tick."""
+        return self.positions.copy()
+
+
+class StackedSlotArenas:
+    """Joint slot arenas for ``num_paths`` homogeneous path islands.
+
+    All paths of a DiPaCo deployment share one architecture, so their
+    decode caches can live in a single pytree whose leaves carry a
+    leading path axis ``(P, reps, num_slots, ...)``.  One vmapped decode
+    dispatch then advances *every* island per tick (the stacked-island
+    tick) instead of one jit call per island from a Python loop — per
+    Pathways, dispatch overhead rather than FLOPs dominates the
+    many-small-islands regime.
+
+    Host-side bookkeeping (free lists, positions, active flags) stays
+    per path; :meth:`view` exposes a :class:`SlotArena`-shaped facade
+    per island so engine/test code is agnostic to the backing layout.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_paths: int, num_slots: int,
+                 cache_len: int):
+        self.cfg = cfg
+        self.num_paths = num_paths
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        one = api.init_serve_cache(cfg, num_slots, cache_len)
+        self.cache = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (num_paths, *x.shape)), one)
+        self._free = [list(range(num_slots - 1, -1, -1))
+                      for _ in range(num_paths)]
+        self.positions = np.zeros((num_paths, num_slots), np.int32)
+        self.active = np.zeros((num_paths, num_slots), bool)
+        self.views = [_StackedArenaView(self, p) for p in range(num_paths)]
+
+        def _write_rows(arena, rows, path, slots):
+            # arena leaves: (P, reps, slots, ...); rows: (reps, R, ...)
+            def one_leaf(a, r):
+                def body(i, acc):
+                    row = jax.lax.dynamic_index_in_dim(
+                        r, i, axis=1, keepdims=True)
+                    return jax.lax.dynamic_update_slice(
+                        acc, row[None].astype(acc.dtype),
+                        (path, 0, slots[i]) + (0,) * (acc.ndim - 3))
+                return jax.lax.fori_loop(0, slots.shape[0], body, a)
+            return jax.tree_util.tree_map(one_leaf, arena, rows)
+
+        # donation is essential here: without it every admission write
+        # would copy the caches of ALL islands, not just the target row
+        self._write_rows = jax.jit(_write_rows, donate_argnums=0)
+
+    # -- per-path bookkeeping (mirrors SlotArena) ----------------------
+    def num_free(self, path: int) -> int:
+        return len(self._free[path])
+
+    def alloc(self, path: int) -> int:
+        if not self._free[path]:
+            raise SlotExhausted(
+                f"all {self.num_slots} slots of path {path} in use")
+        slot = self._free[path].pop()
+        self.active[path, slot] = True
+        self.positions[path, slot] = 0
+        return slot
+
+    def free(self, path: int, slot: int) -> None:
+        if not self.active[path, slot]:
+            raise ValueError(f"slot {slot} of path {path} is not active")
+        self.active[path, slot] = False
+        self.positions[path, slot] = 0
+        self._free[path].append(slot)
+
+    def write_slots(self, path: int, sub_cache, slots, positions) -> None:
+        """Scatter a batch-R cache pytree into rows ``slots`` of island
+        ``path`` (R may be smaller than the sub-cache batch: padded
+        bucket rows beyond R are ignored)."""
+        slots = np.asarray(slots, np.int32)
+        self.cache = self._write_rows(self.cache, sub_cache,
+                                      jnp.int32(path), jnp.asarray(slots))
+        for s, p in zip(slots, np.asarray(positions, np.int32)):
+            self.positions[path, s] = p
+
+
+class _StackedArenaView:
+    """SlotArena-shaped facade over one path of a StackedSlotArenas."""
+
+    def __init__(self, stacked: StackedSlotArenas, path: int):
+        self._stacked = stacked
+        self.path = path
+        self.num_slots = stacked.num_slots
+        self.cache_len = stacked.cache_len
+        # numpy row views: in-place writes hit the shared arrays
+        self.positions = stacked.positions[path]
+        self.active = stacked.active[path]
+
+    @property
+    def num_free(self) -> int:
+        return self._stacked.num_free(self.path)
+
+    @property
+    def cache(self):
+        """This island's cache rows (gathered; for tests/inspection)."""
+        return jax.tree_util.tree_map(lambda x: x[self.path],
+                                      self._stacked.cache)
+
+    def alloc(self) -> int:
+        return self._stacked.alloc(self.path)
+
+    def try_alloc(self):
+        try:
+            return self.alloc()
+        except SlotExhausted:
+            return None
+
+    def free(self, slot: int) -> None:
+        self._stacked.free(self.path, slot)
+
+    def write_slots(self, sub_cache, slots, positions) -> None:
+        self._stacked.write_slots(self.path, sub_cache, slots, positions)
+
+    def decode_indices(self) -> np.ndarray:
         return self.positions.copy()

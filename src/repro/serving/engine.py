@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,8 +31,33 @@ from repro.models import api
 from repro.models.config import ModelConfig
 from repro.models.lm import apply_lm
 
-from .cache import SlotArena
+from .cache import SlotArena, StackedSlotArenas
 from .scheduler import Request, RequestState, Scheduler
+
+
+def _paths_homogeneous(path_params_list) -> bool:
+    """True when every path shares one pytree structure + leaf shapes
+    (same architecture), i.e. params can stack along a path axis."""
+    t0 = jax.tree_util.tree_structure(path_params_list[0])
+    s0 = [(leaf.shape, leaf.dtype)
+          for leaf in jax.tree_util.tree_leaves(path_params_list[0])]
+    for p in path_params_list[1:]:
+        if jax.tree_util.tree_structure(p) != t0:
+            return False
+        if [(leaf.shape, leaf.dtype)
+                for leaf in jax.tree_util.tree_leaves(p)] != s0:
+            return False
+    return True
+
+
+def _default_buckets(cache_len: int):
+    """Power-of-two prompt-length buckets, capped at cache_len."""
+    buckets, b = [], 16
+    while b < cache_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(cache_len)
+    return tuple(buckets)
 
 
 @dataclass
@@ -95,13 +120,20 @@ class PathServingEngine(_EngineBase):
                          feat_params=feat_params, cache_len=cache_len)
         cfg_ = cfg
 
-        @jax.jit
         def _decode(params, tok, cache, idx):
             logits, cache = api.serve_step(
                 params, cfg_, {"tokens": tok}, cache, idx)
             return logits[:, 0], cache
 
-        self._decode = _decode
+        # donate the cache: decode updates it in place (the caller
+        # always rebinds its reference to the returned cache)
+        self._decode = jax.jit(_decode, donate_argnums=2)
+        self._last_cache = None
+
+    def device_state(self):
+        """Device buffers still possibly in flight (for benchmark
+        ``block_until_ready`` before reading the wall clock)."""
+        return jax.tree_util.tree_leaves(self._last_cache)
 
     def _build_cache(self, params, tokens):
         """Prefill by replaying tokens through decode steps (the old
@@ -161,6 +193,7 @@ class PathServingEngine(_EngineBase):
                     jnp.int32(pos))
                 pos += 1
             final_paths[sel] = cur_path
+            self._last_cache = cache
         return GenerationResult(tokens=results, paths=final_paths,
                                 switches=switches)
 
@@ -169,22 +202,68 @@ class ContinuousBatchingEngine(_EngineBase):
     """Continuous-batching, multi-path serving engine.
 
     Per tick: (1) route + admit arrivals into islands with free slots,
-    prefilling each admitted prompt in one forward; (2) decode every
-    in-flight request of an island in a single masked full-arena step
-    (rows that were prefilled this tick, or are free, keep their cache
-    untouched); (3) emit one greedy token per request, retiring finished
-    requests and migrating re-routed ones.
+    prefilling admissions in length-bucketed batched forwards (prompts
+    padded up to a small fixed bucket set, so the compile cache is
+    bounded by the buckets, not the admission pattern); (2) decode every
+    in-flight request of *all* islands in one stacked vmapped dispatch —
+    path params are stacked along a leading axis and the masked decode
+    step is vmapped over it (rows that were prefilled this tick, or are
+    free, keep their cache untouched); (3) emit one greedy token per
+    request, retiring finished requests and migrating re-routed ones.
+
+    ``stacked=False`` falls back to one jit call per island (required
+    for heterogeneous path architectures, where params cannot stack);
+    ``bucketed_prefill=False`` falls back to batch-1 exact-length
+    prefill (automatic for SSM/enc-dec paths, whose recurrent state
+    would absorb pad tokens).
     """
 
     def __init__(self, cfg: ModelConfig, path_params_list, *, router=None,
                  feat_params=None, cache_len: int = 512,
-                 slots_per_path: int = 8, reroute_every: int = 0):
+                 slots_per_path: int = 8, reroute_every: int = 0,
+                 stacked: Optional[bool] = None,
+                 bucketed_prefill: Optional[bool] = None,
+                 prefill_buckets=None):
         super().__init__(cfg, path_params_list, router=router,
                          feat_params=feat_params, cache_len=cache_len)
         self.reroute_every = reroute_every
-        self.arenas = [SlotArena(cfg, slots_per_path, cache_len)
-                       for _ in path_params_list]
-        self.scheduler = Scheduler(len(path_params_list))
+        num_paths = len(path_params_list)
+        homog = _paths_homogeneous(path_params_list)
+        self.stacked = homog if stacked is None else stacked
+        if self.stacked and not homog:
+            raise ValueError("stacked decode requires homogeneous path "
+                             "architectures; pass stacked=False")
+        # pad tokens are causally invisible to attention rows, but a
+        # recurrent SSM state (or enc-dec replay) would absorb them
+        can_bucket = (not api.is_encdec(cfg)
+                      and all(spec.mixer == "attn" for spec in cfg.pattern))
+        self.bucketed = can_bucket if bucketed_prefill is None \
+            else bucketed_prefill
+        if self.bucketed and not can_bucket:
+            raise ValueError("bucketed prefill requires attention-only "
+                             "patterns; pass bucketed_prefill=False")
+        buckets = (tuple(prefill_buckets) if prefill_buckets is not None
+                   else _default_buckets(cache_len))
+        if any(b > cache_len or b < 1 for b in buckets):
+            raise ValueError(f"prefill_buckets {buckets} must lie in "
+                             f"[1, cache_len={cache_len}]")
+        # cache_len is always a bucket so every admissible sequence
+        # (submit enforces prompt+max_new <= cache_len) — including
+        # §2.4.3 migration re-prefills of the running text — hits the
+        # warmed, bounded compile set instead of an exact-length compile
+        self.prefill_buckets = tuple(sorted(set(buckets) | {cache_len}))
+        if self.stacked:
+            self._stacked_params = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *path_params_list)
+            self._stacked_arenas = StackedSlotArenas(
+                cfg, num_paths, slots_per_path, cache_len)
+            self.arenas = self._stacked_arenas.views
+        else:
+            self._stacked_params = None
+            self._stacked_arenas = None
+            self.arenas = [SlotArena(cfg, slots_per_path, cache_len)
+                           for _ in path_params_list]
+        self.scheduler = Scheduler(num_paths)
         self.in_flight: Dict[int, RequestState] = {}
         self.ticks = 0
         cfg_ = cfg
@@ -198,7 +277,18 @@ class ContinuousBatchingEngine(_EngineBase):
         self._prefill = _prefill
 
         @jax.jit
-        def _decode_masked(params, tok, cache, idx, mask):
+        def _prefill_bucketed(params, tokens, last):
+            """Padded-bucket prefill: per-row gather of the logits at
+            each prompt's true last token (pad rows/tails ignored)."""
+            logits, cache = api.prefill(params, cfg_, {"tokens": tokens},
+                                        cache_len)
+            lg = jnp.take_along_axis(
+                logits, last[:, None, None], axis=1)[:, 0]
+            return lg, cache
+
+        self._prefill_bucketed = _prefill_bucketed
+
+        def _decode_one(params, tok, cache, idx, mask):
             logits, new_cache = api.serve_step(
                 params, cfg_, {"tokens": tok}, cache, idx)
 
@@ -209,7 +299,96 @@ class ContinuousBatchingEngine(_EngineBase):
             new_cache = jax.tree_util.tree_map(sel, new_cache, cache)
             return logits[:, 0], new_cache
 
-        self._decode_masked = _decode_masked
+        # caches are donated (in-place decode); every caller rebinds
+        # its cache reference to the returned pytree
+        self._decode_masked = jax.jit(_decode_one, donate_argnums=2)
+        # stacked-island tick: one dispatch advances every island
+        self._decode_stacked = jax.jit(jax.vmap(_decode_one),
+                                       donate_argnums=2)
+
+        def _decode_island(params, path, tok, stacked_cache, idx, mask):
+            """Single-island decode against the stacked arena: slice the
+            island's cache rows out, decode, scatter them back in place
+            (donation).  Used by the hybrid tick when few islands have
+            work — a full stacked dispatch would burn (P-k)/P of its
+            compute on empty islands."""
+            cache_p = jax.tree_util.tree_map(
+                lambda x: jax.lax.dynamic_index_in_dim(
+                    x, path, axis=0, keepdims=False), stacked_cache)
+            logits, new_cache = _decode_one(params, tok, cache_p, idx,
+                                            mask)
+            new_stacked = jax.tree_util.tree_map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), path, axis=0),
+                stacked_cache, new_cache)
+            return logits, new_stacked
+
+        self._decode_island = jax.jit(_decode_island, donate_argnums=3)
+
+    def device_state(self):
+        """Device buffers still possibly in flight (for benchmark
+        ``block_until_ready`` before reading the wall clock)."""
+        if self.stacked:
+            return jax.tree_util.tree_leaves(self._stacked_arenas.cache)
+        return [leaf for a in self.arenas
+                for leaf in jax.tree_util.tree_leaves(a.cache)]
+
+    def _bucket(self, n: int) -> int:
+        """Smallest configured bucket >= n (always exists: the bucket
+        set contains cache_len and submit caps sequences at it)."""
+        for b in self.prefill_buckets:
+            if b >= n:
+                return b
+        raise AssertionError(
+            f"length {n} exceeds every bucket {self.prefill_buckets}")
+
+    def warmup(self) -> None:
+        """Pre-compile the engine's bounded jit cache off the serving
+        clock: every (length-bucket, batch-bucket) prefill variant plus
+        the decode dispatch — the compile set a bucketed engine pays at
+        startup instead of per admission pattern.  (Non-bucketed
+        prefill compiles per exact prompt length and cannot be warmed
+        ahead of the trace.)"""
+        slots = self.arenas[0].num_slots
+        sizes, r = [], 1
+        while r < slots:
+            sizes.append(r)
+            r <<= 1
+        sizes.append(r)
+        seen = set()
+        warm_paths = []
+        for p in self.paths:
+            sig = tuple((leaf.shape, str(leaf.dtype))
+                        for leaf in jax.tree_util.tree_leaves(p))
+            if sig not in seen:
+                seen.add(sig)
+                warm_paths.append(p)
+        if self.bucketed:
+            for params in warm_paths:
+                for length in self.prefill_buckets:
+                    for rows in sizes:
+                        self._prefill_bucketed(
+                            params, jnp.zeros((rows, length), jnp.int32),
+                            jnp.full((rows,), length - 1, jnp.int32))
+        if self.stacked:
+            sa = self._stacked_arenas
+            tok = jnp.zeros((sa.num_paths, sa.num_slots, 1), jnp.int32)
+            mask = jnp.zeros((sa.num_paths, sa.num_slots), bool)
+            _, sa.cache = self._decode_stacked(
+                self._stacked_params, tok, sa.cache,
+                jnp.asarray(sa.positions), mask)   # mask=False: no-op
+            _, sa.cache = self._decode_island(
+                self.paths[0], jnp.int32(0), tok[0], sa.cache,
+                jnp.asarray(sa.positions[0]), mask[0])
+        else:
+            for p, params in enumerate(self.paths):
+                arena = self.arenas[p]
+                tok = jnp.zeros((arena.num_slots, 1), jnp.int32)
+                mask = jnp.zeros(arena.num_slots, bool)
+                _, arena.cache = self._decode_masked(
+                    params, tok, arena.cache,
+                    jnp.asarray(arena.decode_indices()), mask)
+        jax.block_until_ready(self.device_state())
 
     # -- submission ----------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -243,27 +422,68 @@ class ContinuousBatchingEngine(_EngineBase):
         return self._emit_tick(now)
 
     def _admit(self, path: int, reqs: List[Request], now: float) -> None:
-        """Prefill admissions: one multi-token forward per request.
+        """Prefill admissions.
 
-        Batch-1 prefill keeps the number of compilations bounded by the
-        number of distinct prompt lengths (a (batch, length)-shaped jit
-        cache would recompile per admission-group size).
+        Bucketed mode (default for attention paths): prompts are
+        right-padded up to a small fixed set of bucket lengths and the
+        batch is padded to a power of two, so the whole admission group
+        of a bucket prefills in ONE forward and the jit compile cache is
+        bounded by ``len(buckets) * log2(slots)`` entries.  Pad tokens
+        are harmless: each junk cache slot is overwritten by decode
+        before the ring-validity mask would ever admit it, and the
+        per-row logits gather reads each prompt's true last position.
+
+        Fallback: batch-1 exact-length prefill per request (compile
+        cache bounded by distinct prompt lengths).
         """
         arena = self.arenas[path]
+        if not self.bucketed:
+            for r in reqs:
+                s0 = len(r.prompt)
+                logits, cache = self._prefill(self.paths[path],
+                                              jnp.asarray(r.prompt[None]))
+                slot = arena.alloc()
+                arena.write_slots(cache, [slot], [s0])
+                self.in_flight[r.rid] = RequestState(
+                    req=r, path=path, slot=slot,
+                    tokens=list(map(int, r.prompt)),
+                    next_logits=np.asarray(logits)[0],
+                    prefilled_this_tick=True, admitted_at=now)
+            return
+        groups: Dict[int, List[Request]] = {}
         for r in reqs:
-            s0 = len(r.prompt)
-            logits, cache = self._prefill(self.paths[path],
-                                          jnp.asarray(r.prompt[None]))
-            slot = arena.alloc()
-            arena.write_slots(cache, [slot], [s0])
-            self.in_flight[r.rid] = RequestState(
-                req=r, path=path, slot=slot,
-                tokens=list(map(int, r.prompt)),
-                next_logits=np.asarray(logits)[0],
-                prefilled_this_tick=True, admitted_at=now)
+            groups.setdefault(self._bucket(len(r.prompt)), []).append(r)
+        for length, group in sorted(groups.items()):
+            rows = 1 << (len(group) - 1).bit_length()   # batch bucket
+            tok = np.zeros((rows, length), np.int32)
+            last = np.zeros(rows, np.int32)
+            for i, r in enumerate(group):
+                tok[i, :len(r.prompt)] = r.prompt
+                last[i] = len(r.prompt) - 1
+            logits, cache = self._prefill_bucketed(
+                self.paths[path], jnp.asarray(tok), jnp.asarray(last))
+            slots = [arena.alloc() for _ in group]
+            arena.write_slots(cache, slots,
+                              [len(r.prompt) for r in group])
+            logits = np.asarray(logits)
+            for i, r in enumerate(group):
+                self.in_flight[r.rid] = RequestState(
+                    req=r, path=path, slot=slots[i],
+                    tokens=list(map(int, r.prompt)),
+                    next_logits=logits[i],
+                    prefilled_this_tick=True, admitted_at=now)
 
     def _decode_tick(self) -> None:
-        """One masked full-arena decode step per island with work."""
+        """Advance every in-flight request one token.
+
+        Stacked mode: ONE vmapped dispatch decodes the full
+        (paths, slots) arena — per-island dispatch overhead is paid
+        once per tick, not once per island.  Fallback: one masked
+        full-arena decode step per island with work.
+        """
+        if self.stacked:
+            self._decode_tick_stacked()
+            return
         for p, arena in enumerate(self.arenas):
             rows = [st for st in self.in_flight.values()
                     if st.path == p and not st.prefilled_this_tick]
@@ -281,6 +501,40 @@ class ContinuousBatchingEngine(_EngineBase):
             logits = np.asarray(logits)
             for st in rows:
                 st.next_logits = logits[st.slot]
+
+    def _decode_tick_stacked(self) -> None:
+        sa = self._stacked_arenas
+        rows = [st for st in self.in_flight.values()
+                if not st.prefilled_this_tick]
+        if not rows:
+            return
+        tok = np.zeros((sa.num_paths, sa.num_slots, 1), np.int32)
+        mask = np.zeros((sa.num_paths, sa.num_slots), bool)
+        for st in rows:
+            sa.positions[st.path, st.slot] = len(st.tokens) - 1
+            tok[st.path, st.slot, 0] = st.tokens[-1]
+            mask[st.path, st.slot] = True
+        active = sorted({st.path for st in rows})
+        if 2 * len(active) >= sa.num_paths:
+            # dense tick: one vmapped dispatch advances every island
+            logits, sa.cache = self._decode_stacked(
+                self._stacked_params, jnp.asarray(tok), sa.cache,
+                jnp.asarray(sa.positions), jnp.asarray(mask))
+            logits = np.asarray(logits)
+            for st in rows:
+                st.next_logits = logits[st.path, st.slot]
+            return
+        # sparse tick (e.g. trace drain): decode only the active
+        # islands, slicing their rows in/out of the stacked arena
+        out = {}
+        for p in active:
+            lg, sa.cache = self._decode_island(
+                self.paths[p], jnp.int32(p), jnp.asarray(tok[p]),
+                sa.cache, jnp.asarray(sa.positions[p]),
+                jnp.asarray(mask[p]))
+            out[p] = np.asarray(lg)
+        for st in rows:
+            st.next_logits = out[st.path][st.slot]
 
     def _emit_tick(self, now: float) -> List[FinishedRequest]:
         """Append one greedy token per request; retire / migrate."""
@@ -321,8 +575,18 @@ class ContinuousBatchingEngine(_EngineBase):
         slot = self.arenas[new_p].try_alloc()
         if slot is None:
             return
-        toks = jnp.asarray(np.asarray(st.tokens, np.int32)[None])
-        logits, cache = self._prefill(self.paths[new_p], toks)
+        n = len(st.tokens)
+        if self.bucketed:
+            length = self._bucket(n)
+            tok = np.zeros((1, length), np.int32)
+            tok[0, :n] = st.tokens
+            logits, cache = self._prefill_bucketed(
+                self.paths[new_p], jnp.asarray(tok),
+                jnp.asarray([n - 1], np.int32))
+        else:
+            logits, cache = self._prefill(
+                self.paths[new_p],
+                jnp.asarray(np.asarray(st.tokens, np.int32)[None]))
         self.arenas[new_p].write_slots(cache, [slot], [len(st.tokens)])
         self.arenas[st.path].free(st.slot)
         st.path, st.slot = new_p, slot

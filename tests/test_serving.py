@@ -118,6 +118,137 @@ def test_submit_validates_capacity(cfg, two_paths):
 
 
 # ---------------------------------------------------------------------------
+# Stacked-island decode + bucketed prefill (all four decode configs)
+# ---------------------------------------------------------------------------
+_EQ_LENS = [16, 12, 8, 16, 12]
+
+
+@pytest.fixture(scope="module")
+def oneshot_ref(cfg, two_paths):
+    """Reference greedy tokens from the one-shot engine (jnp decode)."""
+    prompts = _prompts(cfg, _EQ_LENS, seed=33)
+    old = PathServingEngine(cfg, two_paths, cache_len=48)
+    ref = {}
+    for ln in sorted(set(_EQ_LENS)):
+        idx = [i for i, l in enumerate(_EQ_LENS) if l == ln]
+        r = old.generate(np.stack([prompts[i] for i in idx]), max_new=6)
+        for j, i in enumerate(idx):
+            ref[i] = r.tokens[j]
+    return prompts, ref
+
+
+@pytest.mark.parametrize("attn_impl", ["chunked", "pallas"])
+@pytest.mark.parametrize("stacked", [False, True])
+def test_decode_configs_token_identical(cfg, two_paths, oneshot_ref,
+                                        attn_impl, stacked):
+    """Greedy outputs are token-identical across all four decode
+    configurations: {jnp, Pallas-interpret kernel} x {looped, stacked
+    islands} — all against the one-shot engine's reference (fp32 smoke
+    config keeps greedy argmax stable)."""
+    prompts, ref = oneshot_ref
+    eng = ContinuousBatchingEngine(
+        cfg.replace(attn_impl=attn_impl), two_paths, cache_len=48,
+        slots_per_path=2, stacked=stacked)
+    assert eng.stacked is stacked and eng.bucketed
+    trace = [Request(rid=i, prompt=prompts[i], max_new=6)
+             for i in range(len(_EQ_LENS))]
+    fins = {f.rid: f for f in eng.serve_trace(trace)}
+    assert len(fins) == len(_EQ_LENS)
+    for i in range(len(_EQ_LENS)):
+        np.testing.assert_array_equal(fins[i].tokens, ref[i])
+    # every slot returned to the pool in both arena layouts
+    assert all(a.num_free == 2 for a in eng.arenas)
+
+
+def test_bucketed_prefill_matches_batch1(cfg, two_paths, oneshot_ref):
+    """Length-bucketed padded-batch prefill admits the same tokens as
+    exact-length batch-1 prefill."""
+    prompts, ref = oneshot_ref
+    eng = ContinuousBatchingEngine(cfg, two_paths, cache_len=48,
+                                   slots_per_path=3,
+                                   bucketed_prefill=False)
+    assert not eng.bucketed
+    trace = [Request(rid=i, prompt=prompts[i], max_new=6)
+             for i in range(len(_EQ_LENS))]
+    fins = {f.rid: f for f in eng.serve_trace(trace)}
+    for i in range(len(_EQ_LENS)):
+        np.testing.assert_array_equal(fins[i].tokens, ref[i])
+
+
+def test_stacked_reroute_migration(cfg, two_paths):
+    """§2.4.3 migration lands in the stacked arena of the target island
+    and keeps decoding there (stacked + bucketed engine)."""
+    prompt = _prompts(cfg, [16], seed=5)[0]
+    old = PathServingEngine(cfg, two_paths, router=ScriptedRouter(),
+                            feat_params=two_paths[0], cache_len=64)
+    ref = old.generate(prompt[None], max_new=12, reroute_every=4)
+    eng = ContinuousBatchingEngine(
+        cfg, two_paths, router=ScriptedRouter(), feat_params=two_paths[0],
+        cache_len=64, slots_per_path=2, reroute_every=4, stacked=True)
+    fins = eng.serve_trace([Request(rid=0, prompt=prompt, max_new=12)])
+    np.testing.assert_array_equal(fins[0].tokens, ref.tokens[0])
+    assert fins[0].switches == ref.switches
+    assert all(a.num_free == 2 for a in eng.arenas)
+
+
+def test_heterogeneous_paths_fall_back_to_loop(cfg, two_paths):
+    """Paths with different architectures cannot stack: auto-detect
+    falls back to the per-island loop; forcing stacked raises."""
+    cfg_small = cfg.replace(d_ff=256)
+    p_other, _ = api.init_model(jax.random.PRNGKey(9), cfg_small)
+    mixed = [two_paths[0], p_other]
+    eng = ContinuousBatchingEngine(cfg, mixed, cache_len=32,
+                                   slots_per_path=2)
+    assert not eng.stacked
+    with pytest.raises(ValueError, match="homogeneous"):
+        ContinuousBatchingEngine(cfg, mixed, cache_len=32,
+                                 slots_per_path=2, stacked=True)
+    with pytest.raises(ValueError, match="attention-only"):
+        from repro.configs import get_smoke_config
+        mcfg = get_smoke_config("mamba2-1.3b")
+        mp, _ = api.init_model(jax.random.PRNGKey(10), mcfg)
+        ContinuousBatchingEngine(mcfg, [mp], cache_len=32,
+                                 slots_per_path=2, bucketed_prefill=True)
+
+
+def test_int8_kv_decode_configs_match(cfg, two_paths):
+    """int8 KV caches (fused in-kernel dequant on the pallas path)
+    produce identical greedy tokens across jnp/pallas x looped/stacked."""
+    qcfg = cfg.replace(kv_quant=True)
+    prompts = _prompts(qcfg, [12, 16], seed=60)
+    trace = lambda: [Request(rid=i, prompt=prompts[i], max_new=5)  # noqa: E731
+                     for i in range(2)]
+    ref = None
+    for attn_impl in ("chunked", "pallas"):
+        for stacked in (False, True):
+            eng = ContinuousBatchingEngine(
+                qcfg.replace(attn_impl=attn_impl), two_paths,
+                cache_len=32, slots_per_path=2, stacked=stacked)
+            fins = {f.rid: f.tokens for f in eng.serve_trace(trace())}
+            if ref is None:
+                ref = fins
+            else:
+                for i in ref:
+                    np.testing.assert_array_equal(fins[i], ref[i])
+
+
+def test_mamba_paths_disable_bucketing_automatically():
+    """SSM paths auto-disable bucketed prefill (pad tokens would pollute
+    the recurrent state) but still serve correctly."""
+    from repro.configs import get_smoke_config
+    mcfg = get_smoke_config("mamba2-1.3b").replace(route_prefix_len=8)
+    mp, _ = api.init_model(jax.random.PRNGKey(11), mcfg)
+    eng = ContinuousBatchingEngine(mcfg, [mp], cache_len=32,
+                                   slots_per_path=2)
+    assert not eng.bucketed and eng.stacked
+    prompts = _prompts(mcfg, [8, 10], seed=50)
+    fins = eng.serve_trace([Request(rid=i, prompt=prompts[i], max_new=4)
+                            for i in range(2)])
+    assert len(fins) == 2
+    assert all(len(f.tokens) == len(prompts[f.rid]) + 4 for f in fins)
+
+
+# ---------------------------------------------------------------------------
 # §2.4.3 re-route cache migration
 # ---------------------------------------------------------------------------
 class ScriptedRouter:
