@@ -30,6 +30,7 @@ NUM_DOMAINS = 8
 PREFIX = 8
 
 BENCH_DECODE_PATH = "BENCH_decode.json"
+BENCH_TRAIN_PATH = "BENCH_train.json"
 
 
 def record_bench(section: str, rows, path: str = BENCH_DECODE_PATH) -> None:

@@ -1,8 +1,15 @@
 """Paper §3.3: sharded outer-optimization executors with online
 accumulation vs a naive monolithic averager — wall-clock per outer step
-and peak working-set proxy."""
+and peak working-set proxy — plus the §3 async-vs-barrier comparison:
+the same miniature training run through the global-barrier round
+trainer and through the phase-pipelined ``TrainingService``
+(``max_phase_lag=1``) with one deliberately slow shard.  The barrier
+pays the straggler every phase; the pipelined service overlaps it.
+Results are recorded to ``BENCH_train.json``.
+"""
 from __future__ import annotations
 
+import tempfile
 import time
 
 import jax
@@ -17,8 +24,7 @@ from repro.models.config import DiPaCoConfig
 from . import common
 
 
-def run(quick: bool = True):
-    s = common.setup(quick)
+def _executor_rows(s):
     cfg, base, key = s["cfg"], s["base"], s["key"]
     P = 8
     dcfg = DiPaCoConfig(levels=(2, 4))
@@ -59,6 +65,76 @@ def run(quick: bool = True):
                  "us_per_call": dt_naive / P * 1e6,
                  "peak_module_bytes": full_bytes,
                  "outer_updates": 1})
+    return rows
+
+
+def _async_vs_barrier_rows(s, quick: bool):
+    """Same run through both regimes under *stochastic* stalls — the
+    paper's preemption/jitter scenario.  Each (shard, phase) task stalls
+    with probability ``stall_prob`` on a schedule deterministic in
+    (shard, phase), so both modes see the identical stall set.  The
+    barrier pays (almost) every phase's worst stall; the pipelined
+    service overlaps a stalled shard with the other shards' next
+    phase."""
+    from repro.data import shard_documents
+    from repro.infra.service import TrainingService
+
+    cfg, key = s["cfg"], s["key"]
+    W = 4
+    docs, doms = s["docs"][:256], np.asarray(s["doms"][:256])
+    ds = shard_documents(docs, doms % W, W)
+    dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=2)
+    phases, stall, stall_prob = (4, 0.4, 0.5) if quick else (8, 0.5, 0.5)
+
+    def stall_s(shard: int, phase: int) -> float:
+        rng = np.random.default_rng(97 + shard * 131 + phase * 7919)
+        return stall if rng.random() < stall_prob else 0.0
+
+    results = {}
+    for mode, lag in (("barrier", 0), ("async_lag1", 1)):
+        with tempfile.TemporaryDirectory() as root:
+            svc = TrainingService(
+                cfg, dcfg, ds, key=key, ckpt_root=root,
+                base_params=s["base"], batch_size=4, peak_lr=1e-3,
+                warmup=10, total_steps=200, num_workers=W,
+                max_phase_lag=lag)
+            inner = svc._handle
+
+            def jittered(task, _inner=inner):
+                time.sleep(stall_s(task.payload["shard_id"],
+                                   task.payload["phase"]))
+                return _inner(task)
+
+            svc.pool.handler = jittered
+            svc.run(1)                    # warm the jit out of the timing
+            t0 = time.time()
+            m = svc.run(phases)
+            dt = time.time() - t0
+            results[mode] = (dt, m)
+            svc.shutdown()
+    dt_b, _ = results["barrier"]
+    dt_a, m_a = results["async_lag1"]
+    return [
+        {"name": "train_service_barrier",
+         "us_per_call": dt_b / phases * 1e6,
+         "wall_s_per_phase": dt_b / phases, "phases": phases,
+         "stall_s": stall, "stall_prob": stall_prob},
+        {"name": "train_service_async_lag1",
+         "us_per_call": dt_a / phases * 1e6,
+         "wall_s_per_phase": dt_a / phases, "phases": phases,
+         "stall_s": stall, "stall_prob": stall_prob,
+         "max_observed_lag": m_a["max_observed_lag"],
+         "outer_updates": m_a["outer_updates"],
+         "speedup_vs_barrier": dt_b / dt_a},
+    ]
+
+
+def run(quick: bool = True):
+    s = common.setup(quick)
+    rows = _executor_rows(s)
+    rows += _async_vs_barrier_rows(s, quick)
+    common.record_bench("outer_exec_async", rows,
+                        path=common.BENCH_TRAIN_PATH)
     return rows
 
 

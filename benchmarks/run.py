@@ -25,13 +25,14 @@ def _derived(row: dict) -> str:
 
 
 # fast, CI-friendly subset exercising the kernel layer, the shared
-# training harness (common.setup), the serving subsystem and the
-# decode hot path
-SMOKE_SUITES = ("kernels", "table2", "serving", "decode")
+# training harness (common.setup), the serving subsystem, the decode
+# hot path and the async training service (async-vs-barrier)
+SMOKE_SUITES = ("kernels", "table2", "serving", "decode", "outer_exec")
 
 # suites whose metrics must additionally be non-zero under --smoke (a
-# zero decode latency / tokens-per-second means the measurement broke)
-POSITIVE_SUITES = ("decode",)
+# zero decode latency / wall-clock / observed-lag means the
+# measurement broke)
+POSITIVE_SUITES = ("decode", "outer_exec")
 
 
 def _finite(row: dict) -> bool:
@@ -39,9 +40,15 @@ def _finite(row: dict) -> bool:
                if isinstance(v, (int, float)))
 
 
+# fields that are legitimately zero (e.g. observed staleness on a run
+# where no shard happened to overtake a straggler) — not gated
+ZERO_OK_FIELDS = {"max_observed_lag"}
+
+
 def _positive(row: dict) -> bool:
-    return all(v > 0 for v in row.values()
-               if isinstance(v, (int, float)) and not isinstance(v, bool))
+    return all(v > 0 for k, v in row.items()
+               if isinstance(v, (int, float)) and not isinstance(v, bool)
+               and k not in ZERO_OK_FIELDS)
 
 
 def main() -> None:

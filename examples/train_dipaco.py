@@ -82,8 +82,10 @@ def main():
         m = tr.run_phase()
         print(f"[phase {ph}] mean loss {m.mean_loss:.4f} "
               f"final {m.final_loss:.4f} ({time.time() - t0:.0f}s)")
+        # full worker-stacked dump ("module" now names the executors'
+        # per-module recovery checkpoints, see infra/ckpt_db.py)
         db.write(tr.worker_params, path_id=-1, phase=ph, step=tr.step,
-                 kind="module")
+                 kind="full")
         if ph == args.phases // 2 - 1 and P > 1:
             # discriminative re-sharding once during training (Alg. 1 l.2)
             print("[reshard] discriminative EM step (§2.4.2)")

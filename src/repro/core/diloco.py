@@ -11,6 +11,8 @@ their copies stay synchronized without a central server.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -64,3 +66,29 @@ def outer_step(worker_params, global_params, outer_state, axes, mix_layers,
 
 def outer_state_init(global_params):
     return nesterov_init(global_params)
+
+
+def window_outer_gradient(segs, weights, *, rescale=True):
+    """Lag-aware executor-window equivalence oracle (§3.3 async).
+
+    A quorum-fired executor window applies the alpha-weighted mean of
+    whatever contributor deltas landed in it — stragglers from earlier
+    phases included — with the sqrt(contributors) rescale of §2.7:
+
+        g = sqrt(|S|) / (sum_{w in S} alpha_w) * sum_{w in S} alpha_w d_w
+
+    ``segs``/``weights`` are the per-contributor delta slices and their
+    alphas, in any order.  With every member present at the same phase
+    this reduces to one row of ``mixing_matrices``; tests check the
+    infra executors against it in both the synchronous and the
+    phase-lagged regime.
+    """
+    wsum = float(sum(weights))
+    scale = (math.sqrt(len(segs)) if rescale else 1.0) / max(wsum, 1e-12)
+    acc = None
+    for seg, w in zip(segs, weights):
+        term = jax.tree_util.tree_map(
+            lambda x, _w=w: _w * x.astype(jnp.float32), seg)
+        acc = term if acc is None else jax.tree_util.tree_map(
+            lambda a, t: a + t, acc, term)
+    return jax.tree_util.tree_map(lambda a: a * scale, acc)

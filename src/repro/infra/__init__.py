@@ -1,4 +1,10 @@
 from .task_queue import Task, TaskQueue
 from .ckpt_db import CheckpointDB
-from .worker_pool import WorkerPool
+from .worker_pool import Monitor, WorkerPool
 from .outer_executor import ShardedOuterExecutors
+from .service import PhaseTimeoutError, TrainingService
+from .trainer import InfraDiPaCoTrainer
+
+__all__ = ["Task", "TaskQueue", "CheckpointDB", "Monitor", "WorkerPool",
+           "ShardedOuterExecutors", "PhaseTimeoutError", "TrainingService",
+           "InfraDiPaCoTrainer"]

@@ -1,6 +1,13 @@
 """Checkpoint metadata table (the paper's Spanner table, §3 step 2) +
 npz checkpoint store (the paper's GFS).  Watchers (outer executors, eval
-workers) poll for rows they have not consumed yet."""
+workers) poll for rows they have not consumed yet.
+
+The DB doubles as the training service's *recovery substrate*: every
+row is appended to ``rows.jsonl`` inside the root so a restarted
+process reconstructs the table (``TrainingService.resume``), and a
+``max_rows_per_path`` retention policy garbage-collects old rows + npz
+files so an always-on service does not grow unboundedly.
+"""
 from __future__ import annotations
 
 import json
@@ -19,7 +26,10 @@ class CkptRow:
     phase: int
     step: int
     file: str
-    kind: str = "train"          # train | module
+    kind: str = "train"          # train | opt | snap | module
+    level: int = -1              # kind="module": which executor wrote it
+    expert: int = -1             # (-1, -1) = the shared-leaves executor
+    extra: dict = field(default_factory=dict)
     ts: float = field(default_factory=time.time)
 
 
@@ -31,38 +41,133 @@ def save_tree(file: str, tree) -> None:
 
 
 def load_tree(file: str, like):
+    """Load a tree saved by ``save_tree``, validated against ``like``.
+
+    The saved treedef, leaf count and per-leaf shapes must all match the
+    template — loading with the wrong template would otherwise zip
+    leaves positionally and silently misassign parameters.
+    """
     data = np.load(file)
     flat, treedef = jax.tree_util.tree_flatten(like)
-    loaded = [data[f"leaf_{i}"] for i in range(len(flat))]
+    n_saved = sum(1 for k in data.files if k.startswith("leaf_"))
+    if n_saved != len(flat):
+        raise ValueError(
+            f"checkpoint {file} holds {n_saved} leaves but the template "
+            f"tree has {len(flat)} — wrong `like` tree for this file")
+    if "treedef" in data.files:
+        saved = json.loads(str(np.asarray(data["treedef"]).item()))
+        if saved != str(treedef):
+            raise ValueError(
+                f"checkpoint {file} treedef mismatch:\n"
+                f"  saved:    {saved}\n  template: {treedef}")
+    loaded = []
+    for i, ref in enumerate(flat):
+        leaf = data[f"leaf_{i}"]
+        if tuple(leaf.shape) != tuple(np.shape(ref)):
+            raise ValueError(
+                f"checkpoint {file} leaf_{i} has shape {leaf.shape}, "
+                f"template expects {np.shape(ref)}")
+        loaded.append(leaf)
     return jax.tree_util.tree_unflatten(treedef, loaded)
 
 
 class CheckpointDB:
-    def __init__(self, root: str):
+    def __init__(self, root: str, *, max_rows_per_path: int | None = None):
         self.root = root
         os.makedirs(root, exist_ok=True)
+        self.max_rows_per_path = max_rows_per_path
         self._lock = threading.Condition()
         self._rows: list = []
+        self._log = os.path.join(root, "rows.jsonl")
+        if os.path.exists(self._log):
+            with open(self._log) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    row = CkptRow(**json.loads(line))
+                    if os.path.exists(row.file):
+                        self._rows.append(row)
+
+    @staticmethod
+    def _group(row: CkptRow):
+        return (row.kind, row.path_id, row.level, row.expert)
 
     def write(self, tree, *, path_id: int, phase: int, step: int,
-              kind: str = "train") -> CkptRow:
-        file = os.path.join(
-            self.root, f"{kind}_p{path_id:04d}_ph{phase:04d}_s{step}.npz")
+              kind: str = "train", level: int = -1, expert: int = -1,
+              extra: dict | None = None) -> CkptRow:
+        if level >= 0:
+            name = f"{kind}_l{level}e{expert}_ph{phase:04d}_s{step}.npz"
+        else:
+            name = f"{kind}_p{path_id:04d}_ph{phase:04d}_s{step}.npz"
+        file = os.path.join(self.root, name)
         save_tree(file, tree)
         row = CkptRow(path_id=path_id, phase=phase, step=step, file=file,
-                      kind=kind)
+                      kind=kind, level=level, expert=expert,
+                      extra=dict(extra or {}))
         with self._lock:
             self._rows.append(row)
+            dropped = self._gc_locked(row) if self.max_rows_per_path else []
+            if dropped:
+                self._rewrite_log_locked()
+            else:
+                with open(self._log, "a") as f:
+                    f.write(json.dumps(asdict(row)) + "\n")
             self._lock.notify_all()
+        for r in dropped:
+            if r.file != file:     # a retried write may reuse the name
+                try:
+                    os.remove(r.file)
+                except OSError:
+                    pass
         return row
 
-    def rows(self, *, kind=None, phase=None) -> list:
+    def _gc_locked(self, row: CkptRow) -> list:
+        group = [r for r in self._rows if self._group(r) == self._group(row)]
+        if len(group) <= self.max_rows_per_path:
+            return []
+        if row.kind == "module":
+            # resume-replay safety: a module row records which train
+            # deltas its apply consumed; while any of those train rows
+            # is still retained, dropping the module row would make the
+            # replay re-fold an already-applied delta.  Keep it pinned
+            # until its train rows are GC'd (quorum < 1 can apply more
+            # than once per phase, outpacing the per-group row budget).
+            retained = {(r.path_id, r.phase) for r in self._rows
+                        if r.kind == "train"}
+
+            def pinned(r):
+                return any((int(w), int(t)) in retained
+                           for w, t in r.extra.get("consumed", []))
+        else:
+            def pinned(r):
+                return False
+        drop = []
+        for r in group[:-1]:          # never drop the just-written row
+            if len(group) - len(drop) <= self.max_rows_per_path:
+                break
+            if not pinned(r):
+                drop.append(r)
+        dropped = set(map(id, drop))
+        self._rows = [r for r in self._rows if id(r) not in dropped]
+        return drop
+
+    def _rewrite_log_locked(self) -> None:
+        tmp = self._log + ".tmp"
+        with open(tmp, "w") as f:
+            for r in self._rows:
+                f.write(json.dumps(asdict(r)) + "\n")
+        os.replace(tmp, self._log)
+
+    def rows(self, *, kind=None, phase=None, path_id=None) -> list:
         with self._lock:
             out = list(self._rows)
         if kind is not None:
             out = [r for r in out if r.kind == kind]
         if phase is not None:
             out = [r for r in out if r.phase == phase]
+        if path_id is not None:
+            out = [r for r in out if r.path_id == path_id]
         return out
 
     def wait_for(self, predicate, timeout: float = 60.0):

@@ -3,19 +3,31 @@
 One executor per module (level, expert) plus one for the shared leaves.
 Executors consume path checkpoints *online* — a delta is accumulated
 into the partial sum as soon as its checkpoint appears (Online Parameter
-Gradient Averaging) — and apply the Nesterov outer update once every
-path through their module has reported.  The full model therefore never
-lives in one place; each executor holds only its module's parameters and
-momentum (Sharded Outer Optimization Executor).
+Gradient Averaging) — and apply the Nesterov outer update once the
+window's quorum of contributors has reported.  The full model therefore
+never lives in one place; each executor holds only its module's
+parameters and momentum (Sharded Outer Optimization Executor).
+
+Asynchronous phase pipelining (§3, Fig. 6): every executor keeps its own
+*window phase counter*.  Contributions arrive tagged with the reporting
+path's phase clock; arrivals ahead of the window are buffered until the
+window advances (``TrainingService.max_phase_lag`` bounds the depth),
+stragglers from an already-applied window fold into the current one
+(Decoupled/Streaming-DiLoCo semantics), and each module applies the
+moment *its* quorum lands — independently of every other module.
+
+With a CheckpointDB attached, each applied update persists a
+``kind="module"`` checkpoint (params + momentum + the contribution keys
+it consumed) — the recovery substrate ``TrainingService.resume`` uses.
 
 Produces updates bit-identical to the vectorized mixing formulation
-(core/diloco.py) — asserted in tests/test_infra.py.
+(core/diloco.py) — asserted in tests/test_infra.py; the quorum/lagged
+window matches ``core.diloco.window_outer_gradient``.
 """
 from __future__ import annotations
 
 import math
 import threading
-from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +36,7 @@ import numpy as np
 from repro.core.module_store import ModuleStore
 from repro.core.partition import PathPartition, paths_through_module
 from repro.optim.nesterov import nesterov_init, nesterov_update
+from .ckpt_db import load_tree
 
 
 def _tree_add(acc, delta, scale):
@@ -38,144 +51,224 @@ def _tree_zeros(like):
         like)
 
 
-class _ModuleExecutor:
-    def __init__(self, store: ModuleStore, level: int, expert: int,
-                 member_workers, alphas, *, lr, momentum, nesterov,
-                 rescale, quorum: float = 1.0):
-        self.store = store
-        self.level, self.expert = level, expert
+def _tree32(tree):
+    return jax.tree_util.tree_map(
+        lambda x: None if x is None else x.astype(jnp.float32), tree)
+
+
+class _ExecutorBase:
+    """Window/quorum/phase machinery shared by the per-module and the
+    shared-leaves executors."""
+
+    def __init__(self, member_workers, alphas, *, lr, momentum, nesterov,
+                 rescale, quorum: float = 1.0, ckpt_db=None):
         self.members = set(int(w) for w in member_workers)
-        self.alphas = {int(w): float(alphas[int(w)]) for w in member_workers}
+        self.alphas = {int(w): float(alphas[int(w)]) for w in self.members}
         self.lr, self.momentum, self.nesterov = lr, momentum, nesterov
         self.rescale = rescale
         self.quorum_frac = quorum
         self.active = set(self.members)
         self.quorum = max(1, math.ceil(quorum * len(self.active)))
-        params = store.module_params(level, expert)
-        self.mom_state = nesterov_init(jax.tree_util.tree_map(
-            lambda x: None if x is None else x.astype(jnp.float32), params))
-        self._reset()
+        self.db = ckpt_db
+        self.phase = 0               # window phase counter
         self.updates = 0
+        self._early: dict = {}       # tag -> [(worker, seg), ...]
+        self._consumed: set = set()  # (worker, tag) restored from module ckpts
         self._lock = threading.Lock()
+        self.mom_state = nesterov_init(_tree32(self._params()))
+        self._reset()
 
-    def set_active(self, active_workers) -> None:
+    # -- subclass surface ----------------------------------------------
+    def _params(self):
+        raise NotImplementedError
+
+    def _slice(self, delta_tree):
+        raise NotImplementedError
+
+    def _write(self, cast):
+        raise NotImplementedError
+
+    def _ckpt_id(self) -> tuple:
+        raise NotImplementedError    # (level, expert); (-1, -1) = shared
+
+    # ------------------------------------------------------------------
+    def set_active(self, active_workers, phase: int | None = None) -> None:
         """Path sampling (paper §2.6.2): only a subset of paths trains
         this phase; the module updates from whichever of its
-        contributors are active (none active -> module untouched)."""
+        contributors are active (none active -> module untouched).
+        ``phase`` aligns the window counter in barrier mode, where an
+        executor may sit out whole phases."""
         with self._lock:
             self.active = self.members & set(int(w) for w in active_workers)
             self.quorum = max(1, math.ceil(
                 self.quorum_frac * max(len(self.active), 1)))
+            if phase is not None:
+                self.phase = int(phase)
+                self._early.clear()
             self._reset()
 
     def _reset(self):
-        self.acc = _tree_zeros(self.store.module_params(self.level,
-                                                        self.expert))
-        self.seen: set = set()
+        self.acc = _tree_zeros(self._params())
+        self.seen: set = set()       # (worker, tag) folded into the window
         self.wsum = 0.0
 
-    def accumulate(self, worker_id: int, delta_tree) -> bool:
+    def accumulate(self, worker_id: int, delta_tree,
+                   phase: int | None = None) -> bool:
         """Online accumulation; returns True if this reached quorum and
         the outer update was applied.  quorum < 1.0 = async outer
         updates: stragglers fold into the next accumulation window."""
-        if worker_id not in self.active:
-            return False
-        seg = self.store.slice_for_level(delta_tree, self.level)
         with self._lock:
-            if worker_id in self.seen:
-                return False   # duplicate (retried task) — idempotent
-            a = self.alphas[worker_id]
-            self.acc = _tree_add(self.acc, seg, a)
-            self.wsum += a
-            self.seen.add(worker_id)
-            if len(self.seen) < self.quorum:
+            # membership must be decided under the lock: a concurrent
+            # set_active could otherwise drop or double-count this
+            # contribution mid-accumulation
+            if worker_id not in self.active:
                 return False
-            self._apply_locked()
-            return True
+            tag = self.phase if phase is None else int(phase)
+            key = (worker_id, tag)
+            if (key in self.seen or key in self._consumed
+                    or any(w == worker_id
+                           for w, _ in self._early.get(tag, ()))):
+                return False   # duplicate (retried task / replay) — idempotent
+            seg = self._slice(delta_tree)
+            if tag > self.phase:
+                # the path raced ahead of this module's window: buffer
+                # until the window advances
+                self._early.setdefault(tag, []).append((worker_id, seg))
+                return False
+            applied = self._fold_locked(worker_id, tag, seg)
+            self._drain_locked()
+            return applied
+
+    def _fold_locked(self, worker_id, tag, seg) -> bool:
+        a = self.alphas[worker_id]
+        self.acc = _tree_add(self.acc, seg, a)
+        self.wsum += a
+        self.seen.add((worker_id, tag))
+        if len({w for w, _ in self.seen}) < self.quorum:
+            return False
+        self._apply_locked()
+        return True
+
+    def _drain_locked(self):
+        """Fold buffered early arrivals that the advancing window has
+        caught up with (each fold may itself fire an apply)."""
+        while True:
+            tags = sorted(t for t in self._early if t <= self.phase)
+            if not tags:
+                return
+            bucket = self._early[tags[0]]
+            worker_id, seg = bucket.pop(0)
+            if not bucket:
+                del self._early[tags[0]]
+            self._fold_locked(worker_id, tags[0], seg)
 
     def _apply_locked(self):
+        # rescale by the number of *contributions* (== distinct workers
+        # in the synchronous case) — keeps the update equal to
+        # core.diloco.window_outer_gradient when a straggler worker
+        # lands two phases in one window
         scale = (math.sqrt(len(self.seen)) if self.rescale else 1.0) \
             / max(self.wsum, 1e-12)
         outer_grad = jax.tree_util.tree_map(
             lambda a: None if a is None else a * scale, self.acc)
-        params = self.store.module_params(self.level, self.expert)
-        params32 = jax.tree_util.tree_map(
-            lambda x: None if x is None else x.astype(jnp.float32), params)
+        params = self._params()
         new_params, self.mom_state = nesterov_update(
-            outer_grad, self.mom_state, params32, lr=self.lr,
+            outer_grad, self.mom_state, _tree32(params), lr=self.lr,
             momentum=self.momentum, nesterov=self.nesterov)
         cast = jax.tree_util.tree_map(
             lambda n, o: None if o is None else n.astype(o.dtype),
             new_params, params)
-        self.store.set_module(self.level, self.expert, cast)
+        self._write(cast)
         self.updates += 1
+        applied_phase = self.phase
+        consumed = sorted(self.seen)
+        self.phase = applied_phase + 1
         self._reset()
+        if self.db is not None:
+            level, expert = self._ckpt_id()
+            self.db.write(
+                {"params": cast, "momentum": self.mom_state},
+                path_id=-1, phase=applied_phase, step=self.updates,
+                kind="module", level=level, expert=expert,
+                extra={"consumed": [[int(w), int(t)] for w, t in consumed],
+                       "updates": int(self.updates)})
+
+    # -- recovery (TrainingService.resume) -----------------------------
+    def ckpt_like(self):
+        return {"params": self._params(), "momentum": self.mom_state}
+
+    def restore(self, row, tree) -> None:
+        """Reset to the state right after the apply recorded by ``row``."""
+        with self._lock:
+            cast = jax.tree_util.tree_map(
+                lambda n, o: None if o is None else jnp.asarray(
+                    n, dtype=o.dtype), tree["params"], self._params())
+            self._write(cast)
+            self.mom_state = jax.tree_util.tree_map(
+                jnp.asarray, tree["momentum"])
+            self.phase = row.phase + 1
+            self.updates = int(row.extra.get("updates", row.step))
+            self._early.clear()
+            self._reset()
+
+    def mark_consumed(self, keys) -> None:
+        with self._lock:
+            self._consumed.update((int(w), int(t)) for w, t in keys)
 
 
-class _SharedExecutor:
+class _ModuleExecutor(_ExecutorBase):
+    def __init__(self, store: ModuleStore, level: int, expert: int,
+                 member_workers, alphas, *, lr, momentum, nesterov,
+                 rescale, quorum: float = 1.0, ckpt_db=None):
+        self.store = store
+        self.level, self.expert = level, expert
+        super().__init__(member_workers, alphas, lr=lr, momentum=momentum,
+                         nesterov=nesterov, rescale=rescale, quorum=quorum,
+                         ckpt_db=ckpt_db)
+
+    def _params(self):
+        return self.store.module_params(self.level, self.expert)
+
+    def _slice(self, delta_tree):
+        return self.store.slice_for_level(delta_tree, self.level)
+
+    def _write(self, cast):
+        self.store.set_module(self.level, self.expert, cast)
+
+    def _ckpt_id(self):
+        return (self.level, self.expert)
+
+
+class _SharedExecutor(_ExecutorBase):
     """Embeddings / final norm — shared by all paths (or untouched when
     unshared; then each path's copy is updated independently)."""
+
     def __init__(self, store: ModuleStore, num_workers: int, alphas, *,
-                 lr, momentum, nesterov, rescale):
+                 lr, momentum, nesterov, rescale, quorum: float = 1.0,
+                 ckpt_db=None):
         self.store = store
-        self.members = set(range(num_workers))
-        self.active = set(self.members)
-        self.alphas = alphas
-        self.lr, self.momentum, self.nesterov = lr, momentum, nesterov
-        self.rescale = rescale
-        self.mom_state = nesterov_init(jax.tree_util.tree_map(
-            lambda x: None if x is None else x.astype(jnp.float32),
-            store.shared))
-        self._lock = threading.Lock()
-        self._reset()
-        self.updates = 0
+        super().__init__(range(num_workers), alphas, lr=lr,
+                         momentum=momentum, nesterov=nesterov,
+                         rescale=rescale, quorum=quorum, ckpt_db=ckpt_db)
 
-    def _reset(self):
-        self.acc = _tree_zeros(self.store.shared)
-        self.seen: set = set()
-        self.wsum = 0.0
+    def _params(self):
+        return self.store.shared
 
-    def set_active(self, active_workers) -> None:
-        with self._lock:
-            self.active = self.members & set(int(w) for w in active_workers)
-            self._reset()
+    def _slice(self, delta_tree):
+        return self.store.shared_of(delta_tree)
 
-    def accumulate(self, worker_id: int, delta_tree) -> bool:
-        if worker_id not in self.active:
-            return False
-        seg = self.store.shared_of(delta_tree)
-        with self._lock:
-            if worker_id in self.seen:
-                return False
-            a = float(self.alphas[worker_id])
-            self.acc = _tree_add(self.acc, seg, a)
-            self.wsum += a
-            self.seen.add(worker_id)
-            if self.seen != self.active:
-                return False
-            scale = (math.sqrt(len(self.seen)) if self.rescale else 1.0) \
-                / max(self.wsum, 1e-12)
-            og = jax.tree_util.tree_map(
-                lambda x: None if x is None else x * scale, self.acc)
-            shared32 = jax.tree_util.tree_map(
-                lambda x: None if x is None else x.astype(jnp.float32),
-                self.store.shared)
-            new, self.mom_state = nesterov_update(
-                og, self.mom_state, shared32, lr=self.lr,
-                momentum=self.momentum, nesterov=self.nesterov)
-            cast = jax.tree_util.tree_map(
-                lambda n, o: None if o is None else n.astype(o.dtype),
-                new, self.store.shared)
-            self.store.set_shared(cast)
-            self.updates += 1
-            self._reset()
-            return True
+    def _write(self, cast):
+        self.store.set_shared(cast)
+
+    def _ckpt_id(self):
+        return (-1, -1)
 
 
 class ShardedOuterExecutors:
     def __init__(self, store: ModuleStore, partition: PathPartition,
                  worker_paths, alphas=None, *, lr=0.7, momentum=0.9,
-                 nesterov=True, rescale=True, quorum: float = 1.0):
+                 nesterov=True, rescale=True, quorum: float = 1.0,
+                 ckpt_db=None):
         worker_paths = np.asarray(worker_paths)
         W = len(worker_paths)
         if alphas is None:
@@ -191,34 +284,60 @@ class ShardedOuterExecutors:
                     continue
                 self.execs[(l, e)] = _ModuleExecutor(
                     store, l, e, members, alphas, lr=lr, momentum=momentum,
-                    nesterov=nesterov, rescale=rescale, quorum=quorum)
+                    nesterov=nesterov, rescale=rescale, quorum=quorum,
+                    ckpt_db=ckpt_db)
         self.shared_exec = None
         if partition.shared_embeddings:
             self.shared_exec = _SharedExecutor(
                 store, W, alphas, lr=lr, momentum=momentum,
-                nesterov=nesterov, rescale=rescale)
+                nesterov=nesterov, rescale=rescale, quorum=quorum,
+                ckpt_db=ckpt_db)
 
-    def set_active(self, active_workers) -> None:
-        """Path sampling (§2.6.2): restrict this phase's contributors."""
-        for ex in self.execs.values():
-            ex.set_active(active_workers)
+    def _all(self) -> dict:
+        out = dict(self.execs)
         if self.shared_exec is not None:
-            self.shared_exec.set_active(active_workers)
+            out[(-1, -1)] = self.shared_exec
+        return out
 
-    def accumulate(self, worker_id: int, delta_tree) -> list:
+    def set_active(self, active_workers, phase: int | None = None) -> None:
+        """Path sampling (§2.6.2): restrict this phase's contributors."""
+        for ex in self._all().values():
+            ex.set_active(active_workers, phase=phase)
+
+    def accumulate(self, worker_id: int, delta_tree,
+                   phase: int | None = None) -> list:
         """Feed one path checkpoint; returns modules completed by it."""
         completed = []
         for key, ex in self.execs.items():
-            if ex.accumulate(worker_id, delta_tree):
+            if ex.accumulate(worker_id, delta_tree, phase=phase):
                 completed.append(key)
         if self.shared_exec is not None:
-            if self.shared_exec.accumulate(worker_id, delta_tree):
+            if self.shared_exec.accumulate(worker_id, delta_tree,
+                                           phase=phase):
                 completed.append("shared")
         return completed
 
+    def restore_from_db(self, db) -> None:
+        """Rebuild every executor's params/momentum/window-phase from
+        the latest ``kind="module"`` row, and mark the contribution keys
+        recorded by *all* module rows as consumed so a subsequent train
+        delta replay is exactly order-faithful."""
+        latest: dict = {}
+        consumed: dict = {}
+        for row in db.rows(kind="module"):
+            k = (row.level, row.expert)
+            latest[k] = row
+            consumed.setdefault(k, []).extend(row.extra.get("consumed", []))
+        for k, row in latest.items():
+            ex = self._all().get(k)
+            if ex is None:
+                continue
+            ex.restore(row, load_tree(row.file, ex.ckpt_like()))
+        for k, keys in consumed.items():
+            ex = self._all().get(k)
+            if ex is not None:
+                ex.mark_consumed(keys)
+
     @property
     def total_updates(self) -> int:
-        n = sum(ex.updates for ex in self.execs.values())
-        if self.shared_exec:
-            n += self.shared_exec.updates
-        return n
+        return sum(ex.updates for ex in self._all().values())

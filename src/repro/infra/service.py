@@ -1,0 +1,433 @@
+"""Always-on asynchronous phase-pipelined DiPaCo training service (§3).
+
+The paper's central systems claim (Fig. 6-7) is that DiPaCo trains as a
+resilient *service*: paths report deltas whenever they finish, sharded
+outer executors advance per-module, and worker death never stalls the
+run.  ``TrainingService`` realises that claim:
+
+ * one long-lived ``WorkerPool`` + ``Monitor`` + ``TaskQueue`` own the
+   whole run — no per-phase pool spin-up, no global ``queue.join()``
+   barrier;
+ * per-path phase clocks: a worker finishing phase t for its shard
+   immediately snapshots its *current* module-store view and enqueues
+   its own phase t+1 task, bounded by a ``max_phase_lag`` staleness
+   window.  ``max_phase_lag=0`` degenerates to the synchronous barrier
+   and is bit-compatible with the legacy round-based trainer;
+ * per-module executors advance independently: each applies its
+   Nesterov update the moment its quorum for phase t lands, even while
+   other modules are still accumulating phase t-1
+   (infra/outer_executor.py);
+ * the ``CheckpointDB`` is the recovery substrate: train deltas, inner
+   optimizer state, phase-start snapshots and per-module outer state
+   (params + momentum + consumed contribution keys) all persist, and
+   ``TrainingService.resume`` reconstructs the exact in-memory state —
+   store, momenta, per-path clocks, in-flight snapshots, *partial
+   accumulation windows* (by replaying unconsumed train deltas) — so a
+   killed process continues bit-compatibly.
+
+Commit protocol: checkpoint-row append order == executor accumulation
+order (both happen under ``_commit_lock``), which is what makes the
+resume replay order-faithful, and hence bit-exact, even though float
+accumulation is order-sensitive.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import weakref
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.module_store import ModuleStore
+from repro.core.partition import make_partition
+from repro.data.loader import ShardLoader, phase_batches
+from repro.data.sharder import PreShardedDataset
+from repro.models import api
+from repro.models.config import DiPaCoConfig, ModelConfig
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from .ckpt_db import CheckpointDB, load_tree
+from .outer_executor import ShardedOuterExecutors
+from .task_queue import Task, TaskQueue
+from .worker_pool import Monitor, WorkerPool
+
+
+class PhaseTimeoutError(RuntimeError):
+    """Raised when a phase target is not reached within the timeout —
+    a real exception, unlike the ``assert`` it replaces, so it survives
+    ``python -O``."""
+
+
+class TrainingService:
+    def __init__(self, cfg: ModelConfig, dcfg: DiPaCoConfig,
+                 dataset: PreShardedDataset, *, key, ckpt_root: str,
+                 base_params=None, batch_size: int = 8,
+                 peak_lr: float = 4e-4, warmup: int = 100,
+                 total_steps: int = 10_000, num_workers: int = 4,
+                 preempt_prob: float = 0.0, seed: int = 0,
+                 max_phase_lag: int = 0, phase_timeout: float = 600.0,
+                 lease_seconds: float = 120.0,
+                 monitor_period: float = 0.05, max_attempts: int = 50,
+                 ckpt_retention: int | None = None, resume: bool = False):
+        self.cfg, self.dcfg = cfg, dcfg
+        self.partition = make_partition(dcfg, cfg.pattern_repeats)
+        P = self.partition.num_paths
+        W = dataset.num_shards
+        if not (W % P == 0 or P == 1):
+            raise ValueError(f"num_shards {W} not a multiple of paths {P}")
+        self.num_shards = W
+        self.worker_paths = np.arange(W) % P
+        if base_params is None:
+            base_params, axes = api.init_model(key, cfg)
+        else:
+            _, axes = api.init_model(key, cfg)
+        self.axes = axes
+        self.store = ModuleStore(base_params, axes, self.partition)
+        alphas = dataset.alphas() if dcfg.loss_reweigh else \
+            np.ones(W) / W
+        if ckpt_retention is None:
+            # replay-safety: retention must cover the staleness window
+            # plus the straggler fold depth (see README)
+            ckpt_retention = max(8, 4 * (max_phase_lag + 2))
+        self.db = CheckpointDB(ckpt_root, max_rows_per_path=ckpt_retention)
+        self.execs = ShardedOuterExecutors(
+            self.store, self.partition, self.worker_paths, alphas,
+            lr=dcfg.outer_lr, momentum=dcfg.outer_momentum,
+            nesterov=dcfg.outer_nesterov, rescale=dcfg.grad_norm_rescale,
+            quorum=dcfg.async_quorum, ckpt_db=self.db)
+        self.loaders = [ShardLoader(s, batch_size, seed=seed + i)
+                        for i, s in enumerate(dataset.shards)]
+        self.opt_states: dict = {i: None for i in range(W)}
+        self.lr = lambda t: cosine_schedule(
+            t, peak_lr=peak_lr, warmup=warmup, total_steps=total_steps)
+        self.max_phase_lag = max_phase_lag
+        self.phase_timeout = phase_timeout
+        self.losses: dict = {}
+        self._jit_phase = jax.jit(self._phase_fn)
+        # barrier-mode counters (legacy run_phase wrapper)
+        self.phase = 0
+        self.step = 0
+        # async per-path phase clocks
+        self.clock = {i: 0 for i in range(W)}
+        self.max_observed_lag = 0
+        self._snapshots: dict = {}       # shard -> (phase, params)
+        self._inflight: set = set()
+        self._phase_done: set = set()    # (shard, phase) committed
+        self._target = 0
+        self._tau = dcfg.inner_steps
+        # serializes db-row append + executor accumulation + clock
+        # advance: row order == accumulation order -> replayable
+        self._commit_lock = threading.Lock()
+        self._clock_cv = threading.Condition()
+        self.queue = TaskQueue(lease_seconds=lease_seconds,
+                               max_attempts=max_attempts)
+        # the pool handler must not hold a strong reference to the
+        # service: worker threads are gc roots, so a strong ref would
+        # keep a dropped service (and its threads) alive forever
+        wself = weakref.ref(self)
+
+        def _pool_handler(task, _w=wself):
+            s = _w()
+            return None if s is None else s._handle(task)
+
+        self.pool = WorkerPool(self.queue, _pool_handler,
+                               num_workers=num_workers,
+                               preempt_prob=preempt_prob, seed=seed,
+                               name="svc")
+        self.monitor = Monitor(self.pool, period=monitor_period)
+        self._started = False
+        if resume:
+            self._restore_from_db()
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def resume(cls, cfg, dcfg, dataset, *, key, ckpt_root, **kw):
+        """Reconstruct a killed service from its checkpoint root.  Must
+        be called with the same constructor arguments as the original
+        run (the DB stores deltas and optimizer state, not the model
+        config or the base initialization)."""
+        return cls(cfg, dcfg, dataset, key=key, ckpt_root=ckpt_root,
+                   resume=True, **kw)
+
+    # ------------------------------------------------------------------
+    def _phase_fn(self, params, opt_state, batches, lrs):
+        cfg = self.cfg
+
+        def body(carry, inp):
+            p, o = carry
+            batch, lr = inp
+            (loss, _), grads = jax.value_and_grad(
+                api.forward_loss, has_aux=True)(p, cfg, {"tokens": batch})
+            p, o = adamw_update(grads, o, p, lr=lr)
+            return (p, o), loss
+
+        (p, o), losses = jax.lax.scan(body, (params, opt_state),
+                                      (batches, lrs))
+        return p, o, losses
+
+    # ------------------------------------------------------------------
+    def _ensure_started(self):
+        if not self._started:
+            self._started = True
+            self.pool.start()
+            self.monitor.start()
+
+    def shutdown(self):
+        if getattr(self, "_shut", False):
+            return
+        self._shut = True
+        self.monitor.stop()
+        self.queue.close()
+        self.pool.stop()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False
+
+    def __del__(self):
+        # services hold a worker pool + monitor; stop them when the
+        # last reference drops so callers that never call shutdown()
+        # (the legacy trainer pattern) don't leak polling threads
+        try:
+            self.shutdown()
+        except Exception:  # noqa: BLE001 - interpreter teardown
+            pass
+
+    # ------------------------------------------------------------------
+    def _handle(self, task: Task):
+        p = task.payload
+        shard, tau = p["shard_id"], p["tau"]
+        t, start_step = p["phase"], p["start_step"]
+        if (shard, t) in self._phase_done:
+            return {"shard": shard, "stale": True}   # retried, already done
+        snap = self._snapshots.get(shard)
+        if snap is None or snap[0] != t:
+            return {"shard": shard, "stale": True}   # superseded retry
+        # phase-start snapshot: every attempt of (shard, t) starts from
+        # the exact theta the task was issued with, even if executors
+        # updated modules since (Algorithm 1 line 4 + idempotence)
+        params0 = snap[1]
+        opt = self.opt_states[shard]
+        if opt is None:
+            opt = adamw_init(params0)
+        # deterministic batches keyed by (shard, phase) — identical to
+        # the vectorized trainer's schedule, recomputable after any
+        # preemption
+        batches = jnp.asarray(phase_batches(
+            self.loaders[shard].tokens, self.loaders[shard].batch_size,
+            tau, shard, t))
+        lrs = jnp.asarray([self.lr(start_step + k) for k in range(tau)])
+        self.queue.renew_lease(task.task_id)
+        params, opt, losses = self._jit_phase(params0, opt, batches, lrs)
+        delta = jax.tree_util.tree_map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            params0, params)
+        loss = float(np.asarray(losses).mean())
+        with self._commit_lock:
+            if (shard, t) in self._phase_done:
+                return {"shard": shard, "stale": True}  # lost a retry race
+            # the artifacts the paper ships via GFS: the delta (consumed
+            # online by executors + the resume replay) and the inner
+            # optimizer state (resume only)
+            self.db.write(delta, path_id=shard, phase=t,
+                          step=start_step + tau, kind="train",
+                          extra={"loss": loss})
+            self.db.write(opt, path_id=shard, phase=t,
+                          step=start_step + tau, kind="opt")
+            self.opt_states[shard] = opt
+            self.losses[(t, shard)] = loss
+            self.execs.accumulate(shard, delta, phase=t)
+            self._complete(shard, t)
+        return {"shard": shard, "loss": loss}
+
+    def _complete(self, shard: int, t: int):
+        """Commit a finished phase and immediately pump any shard whose
+        next phase became eligible (no global barrier)."""
+        with self._clock_cv:
+            self.clock[shard] = max(self.clock[shard], t + 1)
+            self._inflight.discard(shard)
+            self._phase_done.add((shard, t))
+            self._clock_cv.notify_all()
+        self._pump()
+
+    def _pump(self):
+        """Enqueue every shard whose next phase is within the staleness
+        window: shard s may start phase t iff t <= min(clock) +
+        max_phase_lag.  With max_phase_lag=0 this is exactly the global
+        barrier; with lag >= 1 fast shards run ahead of stragglers."""
+        todo = []
+        with self._clock_cv:
+            if self._target:
+                mn = min(self.clock.values())
+                for s in range(self.num_shards):
+                    t = self.clock[s]
+                    if (t >= self._target or s in self._inflight
+                            or t > mn + self.max_phase_lag):
+                        continue
+                    self._inflight.add(s)
+                    self.max_observed_lag = max(self.max_observed_lag,
+                                                t - mn)
+                    todo.append((s, t))
+        for s, t in todo:
+            self._snapshot(s, t)
+            self.queue.put(Task("train", {
+                "shard_id": s, "tau": self._tau, "phase": t,
+                "start_step": t * self._tau}))
+
+    def _snapshot(self, shard: int, t: int):
+        snap = self._snapshots.get(shard)
+        if snap is not None and snap[0] == t:
+            return     # restored from the DB (resume) or already taken
+        params = self.store.assemble(int(self.worker_paths[shard]))
+        self._snapshots[shard] = (t, params)
+        # persisted so resume() re-runs an in-flight phase from the
+        # exact theta it was issued with
+        self.db.write(params, path_id=shard, phase=t, step=t * self._tau,
+                      kind="snap")
+
+    # ------------------------------------------------------------------
+    def run(self, phases: int, tau: int | None = None, *,
+            timeout: float | None = None) -> dict:
+        """Advance every shard ``phases`` more phases, asynchronously
+        pipelined.  ``run(0)`` finishes any outstanding target (after a
+        resume).  Raises PhaseTimeoutError if the target is not reached."""
+        if tau is not None:
+            self._tau = tau
+        if timeout is None:
+            timeout = self.phase_timeout * max(phases, 1)
+        with self._clock_cv:
+            self._target += phases
+            target = self._target
+        self._ensure_started()
+        self._pump()
+        deadline = time.time() + timeout
+        with self._clock_cv:
+            while any(self.clock[s] < target
+                      for s in range(self.num_shards)):
+                if time.time() >= deadline:
+                    raise PhaseTimeoutError(
+                        f"service did not reach phase {target}: "
+                        f"clocks={self.clock} queue={self.queue.stats()}")
+                self._clock_cv.wait(timeout=0.1)
+        last = target - 1
+        mean_loss = float(np.mean(
+            [self.losses[(last, s)] for s in range(self.num_shards)])) \
+            if target > 0 else float("nan")
+        return {"phases": target, "mean_loss": mean_loss,
+                "outer_updates": self.execs.total_updates,
+                "preemptions": self.pool.preemptions,
+                "monitor_restarts": self.monitor.restarts,
+                "max_observed_lag": self.max_observed_lag,
+                "queue": self.queue.stats()}
+
+    # ------------------------------------------------------------------
+    def run_phase(self, tau: int | None = None, *,
+                  sample_paths: int | None = None,
+                  seed: int | None = None) -> dict:
+        """One synchronous outer phase on the persistent pool — the
+        legacy barrier API (kept bit-compatible for the equivalence
+        oracle).  sample_paths: paper §2.6.2 — train only a random
+        subset of paths this phase; unsampled modules keep their
+        parameters.  Do not interleave with async ``run`` calls."""
+        tau = tau or self.dcfg.inner_steps
+        self._tau = tau
+        if sample_paths is not None and sample_paths < self.num_shards:
+            rng = np.random.default_rng(
+                self.phase if seed is None else seed)
+            active = sorted(rng.choice(self.num_shards, sample_paths,
+                                       replace=False).tolist())
+        else:
+            active = list(range(self.num_shards))
+        self.execs.set_active(active, phase=self.phase)
+        for s in active:
+            self._snapshots[s] = (
+                self.phase,
+                self.store.assemble(int(self.worker_paths[s])))
+        self._ensure_started()
+        self.queue.put_many([
+            Task("train", {"shard_id": s, "tau": tau, "phase": self.phase,
+                           "start_step": self.step})
+            for s in active])
+        deadline = time.time() + self.phase_timeout
+        with self._clock_cv:
+            while not all((s, self.phase) in self._phase_done
+                          for s in active):
+                if time.time() >= deadline:
+                    raise PhaseTimeoutError(
+                        f"phase {self.phase} did not finish: "
+                        f"{self.queue.stats()}")
+                self._clock_cv.wait(timeout=0.1)
+        mean_loss = float(np.mean(
+            [self.losses[(self.phase, s)] for s in active]))
+        self.step += tau
+        self.phase += 1
+        return {"mean_loss": mean_loss,
+                "outer_updates": self.execs.total_updates,
+                "preemptions": self.pool.preemptions,
+                "active_paths": active,
+                "queue": self.queue.stats()}
+
+    # ------------------------------------------------------------------
+    def path_params(self, path_id: int):
+        return self.store.assemble(path_id)
+
+    # ------------------------------------------------------------------
+    def _restore_from_db(self):
+        """Reconstruct service state from the checkpoint DB (§3: server
+        failure recovery).  Order matters: outer state first, then
+        clocks/opt/snapshots, then the order-faithful replay of train
+        deltas the executors had not yet folded into an applied update."""
+        rows = self.db.rows()
+        # 1. outer state: module params + momentum + window phases +
+        #    consumed contribution keys
+        self.execs.restore_from_db(self.db)
+        # 2. per-path clocks, losses, inner optimizer state, snapshots
+        latest_opt: dict = {}
+        latest_snap: dict = {}
+        max_step = 0
+        for r in rows:
+            if r.kind == "train":
+                self.clock[r.path_id] = max(self.clock[r.path_id],
+                                            r.phase + 1)
+                max_step = max(max_step, r.step)
+                if "loss" in r.extra:
+                    self.losses[(r.phase, r.path_id)] = r.extra["loss"]
+                    self._phase_done.add((r.path_id, r.phase))
+            elif r.kind == "opt":
+                if r.phase >= latest_opt.get(r.path_id, (-1, None))[0]:
+                    latest_opt[r.path_id] = (r.phase, r)
+            elif r.kind == "snap":
+                if r.phase >= latest_snap.get(r.path_id, (-1, None))[0]:
+                    latest_snap[r.path_id] = (r.phase, r)
+        assembled = {s: self.store.assemble(int(self.worker_paths[s]))
+                     for s in range(self.num_shards)}
+        for s, (_, r) in latest_opt.items():
+            self.opt_states[s] = load_tree(r.file, adamw_init(assembled[s]))
+        for s, (ph, r) in latest_snap.items():
+            if ph == self.clock[s]:   # in-flight phase, not yet committed
+                self._snapshots[s] = (ph, load_tree(r.file, assembled[s]))
+        # 3. replay train deltas in row order (== original accumulation
+        #    order); executors skip keys already consumed by an applied
+        #    update, so this exactly rebuilds partial windows + early
+        #    buffers
+        like32 = {s: jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.float32), assembled[s])
+            for s in range(self.num_shards)}
+        for r in rows:
+            if r.kind != "train":
+                continue
+            self.execs.accumulate(
+                r.path_id, load_tree(r.file, like32[r.path_id]),
+                phase=r.phase)
+        # 4. async bookkeeping: outstanding target covers every phase
+        #    that was started (committed or in-flight)
+        self._target = max(
+            [self.clock[s] for s in range(self.num_shards)]
+            + [ph + 1 for s, (ph, _) in latest_snap.items()
+               if ph == self.clock[s]] + [0])
+        self.phase = max(self.clock.values(), default=0)
+        self.step = max_step

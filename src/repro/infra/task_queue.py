@@ -41,11 +41,15 @@ class TaskQueue:
     # -- producer ------------------------------------------------------
     def put(self, task: Task):
         with self._lock:
+            if self._closed:
+                raise RuntimeError("queue is closed")
             self._pending.append(task)
             self._lock.notify()
 
     def put_many(self, tasks):
         with self._lock:
+            if self._closed:
+                raise RuntimeError("queue is closed")
             self._pending.extend(tasks)
             self._lock.notify_all()
 
@@ -76,6 +80,18 @@ class TaskQueue:
                 task, _ = self._leased.pop(task_id)
                 self._done[task_id] = (task, result)
                 self._lock.notify_all()
+
+    def renew_lease(self, task_id: str) -> bool:
+        """Heartbeat for long-running tasks: push the lease deadline out
+        another ``lease_seconds`` so a slow-but-alive worker is not
+        double-assigned (the service calls this before each inner-phase
+        compute)."""
+        with self._lock:
+            if task_id not in self._leased:
+                return False
+            task, _ = self._leased[task_id]
+            self._leased[task_id] = (task, time.time() + self.lease_seconds)
+            return True
 
     def fail(self, task_id: str, err=None):
         """Worker died / raised: requeue unless attempts exhausted."""

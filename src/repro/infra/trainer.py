@@ -1,4 +1,5 @@
-"""Round-based DiPaCo training on the §3 infrastructure.
+"""Round-based DiPaCo training on the §3 infrastructure — now a thin
+synchronous wrapper over the asynchronous ``TrainingService``.
 
 Workflow (paper Figure 6):
  1. each phase enqueues one train task per path/shard,
@@ -7,33 +8,23 @@ Workflow (paper Figure 6):
     to the DB,
  3. sharded outer executors consume checkpoints online and apply the
     per-module Nesterov update the moment the last contributor lands,
- 4. the next phase starts; preempted workers' tasks are re-leased.
+ 4. the next phase starts; preempted workers' tasks are re-leased and
+    dead worker threads are restarted by the service's Monitor.
 
-Mathematically identical to core/dipaco.DiPaCoTrainer when every task
-succeeds on first attempt (asserted in tests); robust to preemptions
-because tasks are idempotent (deltas are recomputed from the phase-start
-snapshot, and executors de-duplicate by worker id).
+``run_phase`` is exactly ``TrainingService`` with ``max_phase_lag=0``:
+the staleness window degenerates to a global barrier, so the trainer
+stays mathematically identical to core/dipaco.DiPaCoTrainer when every
+task succeeds on first attempt (asserted in tests) and robust to
+preemptions because tasks are idempotent.  The pipelined, barrier-free
+regime lives in infra/service.py.
 """
 from __future__ import annotations
 
-import threading
-from dataclasses import dataclass
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.module_store import ModuleStore
-from repro.core.partition import make_partition
-from repro.data.loader import ShardLoader
 from repro.data.sharder import PreShardedDataset
-from repro.models import api
 from repro.models.config import DiPaCoConfig, ModelConfig
-from repro.optim import adamw_init, adamw_update, cosine_schedule
-from .ckpt_db import CheckpointDB
-from .outer_executor import ShardedOuterExecutors
-from .task_queue import Task, TaskQueue
-from .worker_pool import WorkerPool
+from .service import PhaseTimeoutError, TrainingService
+
+__all__ = ["InfraDiPaCoTrainer", "PhaseTimeoutError"]
 
 
 class InfraDiPaCoTrainer:
@@ -43,135 +34,73 @@ class InfraDiPaCoTrainer:
                  peak_lr: float = 4e-4, warmup: int = 100,
                  total_steps: int = 10_000, num_workers: int = 4,
                  preempt_prob: float = 0.0, seed: int = 0):
-        self.cfg, self.dcfg = cfg, dcfg
-        self.partition = make_partition(dcfg, cfg.pattern_repeats)
-        P = self.partition.num_paths
-        W = dataset.num_shards
-        assert W % P == 0 or P == 1
-        self.num_shards = W
-        self.worker_paths = np.arange(W) % P
-        if base_params is None:
-            base_params, axes = api.init_model(key, cfg)
-        else:
-            _, axes = api.init_model(key, cfg)
-        self.axes = axes
-        self.store = ModuleStore(base_params, axes, self.partition)
-        alphas = dataset.alphas() if dcfg.loss_reweigh else \
-            np.ones(W) / W
-        self.execs = ShardedOuterExecutors(
-            self.store, self.partition, self.worker_paths, alphas,
-            lr=dcfg.outer_lr, momentum=dcfg.outer_momentum,
-            nesterov=dcfg.outer_nesterov, rescale=dcfg.grad_norm_rescale,
-            quorum=dcfg.async_quorum)
-        self.db = CheckpointDB(ckpt_root)
-        self.loaders = [ShardLoader(s, batch_size, seed=seed + i)
-                        for i, s in enumerate(dataset.shards)]
-        self.opt_states = {i: None for i in range(W)}
-        self.lr = lambda t: cosine_schedule(
-            t, peak_lr=peak_lr, warmup=warmup, total_steps=total_steps)
-        self.step = 0
-        self.phase = 0
-        self.num_pool_workers = num_workers
-        self.preempt_prob = preempt_prob
-        self._jit_phase = jax.jit(self._phase_fn, static_argnames=())
-        self._state_lock = threading.Lock()
-        self.losses: dict = {}
+        self.service = TrainingService(
+            cfg, dcfg, dataset, key=key, ckpt_root=ckpt_root,
+            base_params=base_params, batch_size=batch_size,
+            peak_lr=peak_lr, warmup=warmup, total_steps=total_steps,
+            num_workers=num_workers, preempt_prob=preempt_prob,
+            seed=seed, max_phase_lag=0)
 
-    # ------------------------------------------------------------------
-    def _phase_fn(self, params, opt_state, batches, lrs):
-        cfg = self.cfg
+    # -- legacy surface -------------------------------------------------
+    @property
+    def cfg(self):
+        return self.service.cfg
 
-        def body(carry, inp):
-            p, o = carry
-            batch, lr = inp
-            (loss, _), grads = jax.value_and_grad(
-                api.forward_loss, has_aux=True)(p, cfg, {"tokens": batch})
-            p, o = adamw_update(grads, o, p, lr=lr)
-            return (p, o), loss
+    @property
+    def dcfg(self):
+        return self.service.dcfg
 
-        (p, o), losses = jax.lax.scan(body, (params, opt_state),
-                                      (batches, lrs))
-        return p, o, losses
+    @property
+    def partition(self):
+        return self.service.partition
 
-    # ------------------------------------------------------------------
-    def _handle(self, task: Task):
-        shard_id = task.payload["shard_id"]
-        tau = task.payload["tau"]
-        start_step = task.payload["start_step"]
-        path_id = int(self.worker_paths[shard_id])
-        # phase-start snapshot: every task in phase t starts from
-        # theta^{t-1} even if executors already updated modules with
-        # earlier arrivals of this phase (Algorithm 1 line 4)
-        params0 = self._phase_snapshots[shard_id]
-        with self._state_lock:
-            opt = self.opt_states[shard_id]
-        if opt is None:
-            opt = adamw_init(params0)
-        # deterministic batches keyed by (shard, phase) — identical to the
-        # vectorized trainer's schedule, and re-computable after preemption
-        from repro.data.loader import phase_batches
-        batches = jnp.asarray(phase_batches(
-            self.loaders[shard_id].tokens,
-            self.loaders[shard_id].batch_size, tau, shard_id, self.phase))
-        lrs = jnp.asarray([self.lr(start_step + t) for t in range(tau)])
-        params, opt, losses = self._jit_phase(params0, opt, batches, lrs)
-        delta = jax.tree_util.tree_map(
-            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
-            params0, params)
-        # checkpoint delta (the artifact the paper ships via GFS)
-        self.db.write(delta, path_id=shard_id, phase=self.phase,
-                      step=start_step + tau, kind="train")
-        with self._state_lock:
-            self.opt_states[shard_id] = opt
-            self.losses[(self.phase, shard_id)] = float(
-                np.asarray(losses).mean())
-        # online outer accumulation (executors are internally locked)
-        self.execs.accumulate(shard_id, delta)
-        return {"shard": shard_id, "loss": float(np.asarray(losses).mean())}
+    @property
+    def store(self):
+        return self.service.store
 
-    # ------------------------------------------------------------------
+    @property
+    def execs(self):
+        return self.service.execs
+
+    @property
+    def db(self):
+        return self.service.db
+
+    @property
+    def losses(self):
+        return self.service.losses
+
+    @property
+    def worker_paths(self):
+        return self.service.worker_paths
+
+    @property
+    def num_shards(self):
+        return self.service.num_shards
+
+    @property
+    def phase(self):
+        return self.service.phase
+
+    @property
+    def step(self):
+        return self.service.step
+
     def run_phase(self, tau: int | None = None, *,
                   sample_paths: int | None = None,
                   seed: int | None = None) -> dict:
-        """One outer phase.  sample_paths: paper §2.6.2 — train only a
-        random subset of paths this phase (the backup-pool regime where
-        devices are scarcer than paths); unsampled modules keep their
-        parameters."""
-        tau = tau or self.dcfg.inner_steps
-        if sample_paths is not None and sample_paths < self.num_shards:
-            rng = np.random.default_rng(
-                self.phase if seed is None else seed)
-            active = sorted(rng.choice(self.num_shards, sample_paths,
-                                       replace=False).tolist())
-        else:
-            active = list(range(self.num_shards))
-        self.execs.set_active(active)
-        self._phase_snapshots = {
-            i: self.store.assemble(int(self.worker_paths[i]))
-            for i in active}
-        queue = TaskQueue(lease_seconds=120.0)
-        tasks = [Task("train", {"shard_id": i, "tau": tau,
-                                "start_step": self.step})
-                 for i in active]
-        queue.put_many(tasks)
-        pool = WorkerPool(queue, self._handle,
-                          num_workers=self.num_pool_workers,
-                          preempt_prob=self.preempt_prob,
-                          seed=self.phase).start()
-        ok = queue.join(timeout=600.0)
-        queue.close()
-        pool.stop()
-        assert ok, f"phase {self.phase} did not finish: {queue.stats()}"
-        self.step += tau
-        self.phase += 1
-        mean_loss = float(np.mean(
-            [self.losses[(self.phase - 1, i)] for i in active]))
-        return {"mean_loss": mean_loss,
-                "outer_updates": self.execs.total_updates,
-                "preemptions": pool.preemptions,
-                "active_paths": active,
-                "queue": queue.stats()}
+        return self.service.run_phase(tau, sample_paths=sample_paths,
+                                      seed=seed)
 
-    # ------------------------------------------------------------------
     def path_params(self, path_id: int):
-        return self.store.assemble(path_id)
+        return self.service.path_params(path_id)
+
+    def shutdown(self):
+        self.service.shutdown()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False

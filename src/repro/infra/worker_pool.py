@@ -2,9 +2,13 @@
 
 Workers repeatedly fetch tasks from the queue and run a handler.  A
 ``preempt_prob`` simulates low-tier backup-pool preemptions: the worker
-"dies" mid-task (raises), the queue lease expires / fail() requeues the
-task, and another worker picks it up — training progress must be
-unaffected (tested in tests/test_infra.py).
+"dies" mid-task — the task is failed back to the queue (its lease
+expires / fail() requeues it) AND the worker thread terminates, exactly
+like a reclaimed machine.  Capacity only comes back when the ``Monitor``
+(§3 step 6) notices the dead thread and restarts a replacement, so
+monitor restarts are genuinely exercised, not dead code.  Handler bugs
+(any non-``Preempted`` exception) requeue the task but keep the worker
+alive.
 """
 from __future__ import annotations
 
@@ -36,6 +40,8 @@ class WorkerPool:
         self.completed = 0
         self.preemptions = 0
         self._lock = threading.Lock()
+        self._next_wid = 0
+        self.spawned: list = []     # every worker id ever started
 
     def _run(self, wid: int):
         while not self._stop.is_set():
@@ -55,22 +61,38 @@ class WorkerPool:
                     self.completed += 1
             except Preempted as e:
                 self.queue.fail(task.task_id, str(e))
-            except Exception as e:  # noqa: BLE001 - worker crash -> requeue
+                return    # the machine is gone; only Monitor restores it
+            except Exception as e:  # noqa: BLE001 - handler bug -> requeue
                 self.queue.fail(task.task_id,
                                 f"{e}\n{traceback.format_exc()[-500:]}")
 
-    def start(self):
-        for i in range(self.num_workers):
-            t = threading.Thread(target=self._run, args=(i,),
-                                 name=f"{self.name}-{i}", daemon=True)
-            t.start()
+    def spawn_worker(self) -> threading.Thread:
+        """Start one worker on a fresh id — never reuses the id of a
+        live worker (the Monitor-restart id-collision bug)."""
+        with self._lock:
+            wid = self._next_wid
+            self._next_wid += 1
+            self.spawned.append(wid)
+        t = threading.Thread(target=self._run, args=(wid,),
+                             name=f"{self.name}-{wid}", daemon=True)
+        t.start()
+        with self._lock:
             self._threads.append(t)
+        return t
+
+    def start(self):
+        for _ in range(self.num_workers):
+            self.spawn_worker()
         return self
 
     def stop(self, timeout: float = 5.0):
         self._stop.set()
-        for t in self._threads:
-            t.join(timeout=timeout)
+        cur = threading.current_thread()
+        with self._lock:
+            threads = list(self._threads)
+        for t in threads:
+            if t is not cur:      # stop() may run on a pool thread (gc)
+                t.join(timeout=timeout)
 
 
 class Monitor:
@@ -86,18 +108,17 @@ class Monitor:
     def _run(self):
         while not self._stop.is_set():
             time.sleep(self.period)
-            alive = [t for t in self.pool._threads if t.is_alive()]
-            dead = len(self.pool._threads) - len(alive)
-            if dead and not self.pool._stop.is_set():
+            if self.pool._stop.is_set():
+                continue
+            with self.pool._lock:
+                alive = [t for t in self.pool._threads if t.is_alive()]
+                dead = len(self.pool._threads) - len(alive)
                 self.pool._threads = alive
-                for _ in range(dead):
-                    i = len(self.pool._threads)
-                    t = threading.Thread(
-                        target=self.pool._run, args=(i,),
-                        name=f"{self.pool.name}-r{i}", daemon=True)
-                    t.start()
-                    self.pool._threads.append(t)
-                    self.restarts += 1
+            for _ in range(dead):
+                if self.pool._stop.is_set() or self._stop.is_set():
+                    break
+                self.pool.spawn_worker()
+                self.restarts += 1
 
     def start(self):
         self._thread.start()
@@ -105,3 +126,6 @@ class Monitor:
 
     def stop(self):
         self._stop.set()
+        if (self._thread.is_alive()
+                and self._thread is not threading.current_thread()):
+            self._thread.join(timeout=2.0)

@@ -72,13 +72,17 @@ def test_barrier():
 
 
 def test_worker_pool_with_preemptions_completes_all():
+    from repro.infra import Monitor
     q = TaskQueue(lease_seconds=5.0, max_attempts=50)
     q.put_many([Task("w", {"i": i}) for i in range(20)])
     done = []
     pool = WorkerPool(q, lambda t: done.append(t.payload["i"]),
                       num_workers=4, preempt_prob=0.4, seed=1).start()
+    # preempted workers really die; the Monitor restores capacity
+    mon = Monitor(pool, period=0.02).start()
     assert q.join(timeout=30.0)
     q.close()
+    mon.stop()
     pool.stop()
     assert sorted(set(done)) == list(range(20))
     assert pool.preemptions > 0
