@@ -31,6 +31,7 @@ PREFIX = 8
 
 BENCH_DECODE_PATH = "BENCH_decode.json"
 BENCH_TRAIN_PATH = "BENCH_train.json"
+BENCH_DEPLOY_PATH = "BENCH_deploy.json"
 
 
 def record_bench(section: str, rows, path: str = BENCH_DECODE_PATH) -> None:

@@ -1,0 +1,162 @@
+"""Deployment-plane latency: outer-update -> serving-visible staleness
+and the serving throughput dip during a hot swap.
+
+One process runs the whole pipeline the deployment plane connects: a
+``TrainingService`` advances outer phases (writing per-module checkpoint
+rows), a ``Publisher`` cuts + canary-gates + promotes candidate
+manifests, and a ``ContinuousBatchingEngine`` serving a steady request
+load hot-swaps to each promoted version between decode ticks.
+
+Measured (recorded to ``BENCH_deploy.json``):
+
+* ``staleness_s`` — wall-clock from the last module row of an outer
+  phase landing in the checkpoint DB to the first engine tick that
+  serves the new version (includes manifest cut, content-addressed
+  copy, canary scoring, promote, and the engine's swap install);
+* ``canary_ms`` / ``publish_ms`` — the canary-gate share vs the whole
+  publish cycle;
+* ``swap_tick_ratio`` — slowest tick in the swap window over the median
+  steady-state tick (the throughput dip a drain-policy swap causes);
+* ``install_ms`` — the parameter-install (restack with donation) cost.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data import SyntheticCorpus, shard_documents
+from repro.deploy import CanaryGate, DeploymentRegistry, Publisher
+from repro.infra import TrainingService
+from repro.models import api
+from repro.models.config import DiPaCoConfig
+from repro.serving import (ContinuousBatchingEngine, Request,
+                           prefix_hash_router)
+
+from .common import BENCH_DEPLOY_PATH, record_bench
+
+
+def _drive(engine, reqs, tick_times=None):
+    """Submit ``reqs`` and tick the engine dry, timing each tick."""
+    for r in reqs:
+        engine.submit(r)
+    fins = []
+    while not engine.idle:
+        t0 = time.perf_counter()
+        fins.extend(engine.step(now=time.time()))
+        jax.block_until_ready(engine.device_state())
+        if tick_times is not None:
+            tick_times.append(time.perf_counter() - t0)
+    return fins
+
+
+def run(quick: bool = True):
+    cfg = get_smoke_config("dipaco-150m").replace(route_prefix_len=8)
+    dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=2)
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, num_domains=4,
+                             seq_len=48, seed=0)
+    docs, doms = corpus.sample_documents(192, return_domains=True)
+    ds = shard_documents(docs, doms % 4, 4)
+    key = jax.random.PRNGKey(0)
+    base, _ = api.init_model(key, cfg)
+    shadow = corpus.sample_documents(8, seed=99)[:, :32]
+    num_paths = 4
+    max_new = 8
+    n_load = 8 if quick else 24
+
+    def make_reqs(seed, n):
+        docs = corpus.sample_documents(n, seed=seed)
+        return [Request(rid=seed * 1000 + i,
+                        prompt=np.asarray(docs[i][:16], np.int32),
+                        max_new=max_new, arrival=0.0) for i in range(n)]
+
+    with tempfile.TemporaryDirectory() as root:
+        svc = TrainingService(cfg, dcfg, ds, key=key,
+                              ckpt_root=os.path.join(root, "db"),
+                              base_params=base, batch_size=4,
+                              peak_lr=1e-3, warmup=10, total_steps=100,
+                              num_workers=1)
+        registry = DeploymentRegistry(cfg, dcfg,
+                                      os.path.join(root, "deploy"),
+                                      key=key, base_params=base)
+        # wide-open gate: this benchmark measures plumbing latency, not
+        # model quality at miniature scale
+        gate = CanaryGate(cfg, shadow, ppl_ratio_tol=100.0,
+                          min_agreement=0.0)
+        pub = Publisher(svc.db, registry, gate=gate)
+        pub.bootstrap()
+
+        engine = ContinuousBatchingEngine(
+            cfg, registry=registry, cache_len=32, slots_per_path=2,
+            prefill_buckets=(16,), swap_policy="drain",
+            route_fn=prefix_hash_router(num_paths))
+        engine.warmup()
+        _drive(engine, make_reqs(1, n_load))        # warm the tick loop
+
+        svc.run(1, tau=2)                           # phase 0 -> module rows
+        t_update = max(r.ts for r in svc.db.rows(kind="module"))
+        v0 = engine.version
+        t0 = time.perf_counter()
+        out = pub.publish_cycle()
+        publish_s = time.perf_counter() - t0
+        assert out["promoted"] is not None, f"no promotion: {out}"
+        # staleness: outer update committed -> first tick serving it
+        engine.submit(make_reqs(2, 1)[0])
+        while engine.version == v0:
+            engine.step(now=time.time())
+        t_visible = time.time()
+        staleness_s = t_visible - t_update
+        while not engine.idle:
+            engine.step(now=time.time())
+        # canary share of the cycle: re-evaluate on the warmed gate
+        t0 = time.perf_counter()
+        gate.evaluate(registry.materialize(out["promoted"]),
+                      registry.serving_paths())
+        canary_s = time.perf_counter() - t0
+
+        # steady-state ticks on the promoted version
+        steady: list = []
+        _drive(engine, make_reqs(3, n_load), steady)
+        v_first = engine.version
+
+        # next phase: measure the swap window under load
+        svc.run(1, tau=2)
+        pub.publish_cycle()
+        swap_win: list = []
+        fins = _drive(engine, make_reqs(4, n_load), swap_win)
+        assert engine.version > v_first, "engine did not pick up the swap"
+        assert any(f.version == engine.version for f in fins)
+        # isolate the pure install cost (restack with donated buffers)
+        t0 = time.perf_counter()
+        engine._install(engine.version,
+                        registry.materialize(engine.version))
+        jax.block_until_ready(
+            jax.tree_util.tree_leaves(engine._stacked_params)
+            if engine.stacked else [])
+        install_s = time.perf_counter() - t0
+        svc.shutdown()
+        pub.close()
+
+    med_steady = float(np.median(steady))
+    rows = [
+        {"name": "deploy_staleness", "us_per_call": staleness_s * 1e6,
+         "staleness_s": staleness_s, "publish_ms": publish_s * 1e3,
+         "canary_ms": canary_s * 1e3,
+         "versions": len(registry.versions)},
+        {"name": "deploy_swap", "us_per_call": install_s * 1e6,
+         "install_ms": install_s * 1e3,
+         "swap_tick_ratio": float(max(swap_win) / med_steady),
+         "steady_tick_ms": med_steady * 1e3,
+         "swaps": engine.swaps},
+    ]
+    record_bench("deploy_latency", rows, path=BENCH_DEPLOY_PATH)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -26,13 +26,15 @@ def _derived(row: dict) -> str:
 
 # fast, CI-friendly subset exercising the kernel layer, the shared
 # training harness (common.setup), the serving subsystem, the decode
-# hot path and the async training service (async-vs-barrier)
-SMOKE_SUITES = ("kernels", "table2", "serving", "decode", "outer_exec")
+# hot path, the async training service (async-vs-barrier) and the
+# deployment plane (publish/canary/hot-swap)
+SMOKE_SUITES = ("kernels", "table2", "serving", "decode", "outer_exec",
+                "deploy")
 
 # suites whose metrics must additionally be non-zero under --smoke (a
-# zero decode latency / wall-clock / observed-lag means the
+# zero decode latency / wall-clock / observed-lag / staleness means the
 # measurement broke)
-POSITIVE_SUITES = ("decode", "outer_exec")
+POSITIVE_SUITES = ("decode", "outer_exec", "deploy")
 
 
 def _finite(row: dict) -> bool:
@@ -62,10 +64,10 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (decode_step_latency, fig8_convergence, fig9_path_scaling,
-                   fig11_alternating, kernels_micro, outer_exec_scaling,
-                   roofline, serving_throughput, sync_vs_diloco,
-                   table1_variants, table2_flatmoe_overfit,
+    from . import (decode_step_latency, deploy_latency, fig8_convergence,
+                   fig9_path_scaling, fig11_alternating, kernels_micro,
+                   outer_exec_scaling, roofline, serving_throughput,
+                   sync_vs_diloco, table1_variants, table2_flatmoe_overfit,
                    table3_eval_routing, table5_sharding)
     suites = {
         "table1": table1_variants,
@@ -81,6 +83,7 @@ def main() -> None:
         "roofline": roofline,
         "serving": serving_throughput,
         "decode": decode_step_latency,
+        "deploy": deploy_latency,
     }
     if args.smoke:
         suites = {k: suites[k] for k in SMOKE_SUITES}

@@ -13,7 +13,8 @@ clock:
   (one vmapped dispatch advances every island) + length-bucketed
   batched prefill.
 
-Reports requests/s and p50/p99 request latency for each, the speedups,
+Reports requests/s, p50/p95/p99 request latency and (for the
+continuous engines) p50/p95 time-to-first-token for each, the speedups,
 verifies greedy outputs are token-identical across all engines, and
 records the rows into ``BENCH_decode.json``.  Offered load exceeds the
 one-shot capacity so req/s measures service capacity, not the Poisson
@@ -29,14 +30,15 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.models import api
 from repro.serving import (ContinuousBatchingEngine, PathServingEngine,
-                           Request, poisson_trace)
+                           Request, poisson_trace, prefix_hash_router)
 
 from .common import record_bench
 
 
 def _percentiles(lat):
     lat = np.asarray(lat)
-    return float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
+    return (float(np.percentile(lat, 50)), float(np.percentile(lat, 95)),
+            float(np.percentile(lat, 99)))
 
 
 def _serve_oneshot(engine, trace, max_new):
@@ -93,28 +95,25 @@ def run(quick: bool = True):
     # deterministic prompt-hash routing spreads the trace over all
     # islands identically for every engine (keeps the token-identity
     # check meaningful without training a router)
-    def hash_route(prompt) -> int:
-        return int(np.asarray(prompt[:8], np.int64).sum()) % num_paths
+    hash_route = prefix_hash_router(num_paths)
 
     def make_trace():
         return poisson_trace(n, rate=rate, prompt_lens=prompt_lens,
                              max_new=max_new, vocab_size=cfg.vocab_size,
                              seed=7)
 
-    oneshot = PathServingEngine(cfg, paths, cache_len=cache_len)
-    oneshot.route = lambda toks: np.asarray([hash_route(t) for t in toks],
-                                            np.int32)
+    oneshot = PathServingEngine(cfg, paths, cache_len=cache_len,
+                                route_fn=hash_route)
     cont_pr1 = ContinuousBatchingEngine(
         cfg, paths, cache_len=cache_len, slots_per_path=slots,
-        stacked=False, bucketed_prefill=False)
+        stacked=False, bucketed_prefill=False, route_fn=hash_route)
     # buckets matched to the trace's length distribution (how a
     # deployment would choose them); compile cache stays bounded by
     # the bucket set either way
     cont = ContinuousBatchingEngine(cfg, paths, cache_len=cache_len,
                                     slots_per_path=slots,
-                                    prefill_buckets=prompt_lens)
-    cont_pr1._route_prompt = hash_route
-    cont._route_prompt = hash_route
+                                    prefill_buckets=prompt_lens,
+                                    route_fn=hash_route)
 
     # warmup: compile every (batch, length) prefill/decode variant off
     # the clock
@@ -139,7 +138,8 @@ def run(quick: bool = True):
         span_wall = time.perf_counter() - t0
         span = max(max(f.finished_at for f in fins), span_wall)
         return ({f.rid: f.tokens for f in fins},
-                {f.rid: f.latency for f in fins}, span)
+                {f.rid: f.latency for f in fins}, span,
+                {f.rid: f.ttft for f in fins})
 
     # interleaved trials + median span: wall-clock noise on a shared
     # CPU swings whole seconds, so pair the engines in time and take a
@@ -154,8 +154,8 @@ def run(quick: bool = True):
     for _ in range(trials):
         res_p.append(_serve_cont_once(cont_pr1))
         res_c.append(_serve_cont_once(cont))
-    tok_p, lat_p, _ = res_p[-1]
-    tok_c, lat_c, _ = res_c[-1]
+    tok_p, lat_p, _, ttft_p = res_p[-1]
+    tok_c, lat_c, _, ttft_c = res_c[-1]
     span_p = float(np.median([r[2] for r in res_p]))
     span_c = float(np.median([r[2] for r in res_c]))
 
@@ -166,20 +166,27 @@ def run(quick: bool = True):
             "continuous-batching greedy outputs diverged from the "
             "one-shot engine")
     rps_1, rps_p, rps_c = n / span_1, n / span_p, n / span_c
-    p50_1, p99_1 = _percentiles(list(lat_1.values()))
-    p50_p, p99_p = _percentiles(list(lat_p.values()))
-    p50_c, p99_c = _percentiles(list(lat_c.values()))
+    p50_1, p95_1, p99_1 = _percentiles(list(lat_1.values()))
+    p50_p, p95_p, p99_p = _percentiles(list(lat_p.values()))
+    p50_c, p95_c, p99_c = _percentiles(list(lat_c.values()))
+    # time-to-first-token (prefill + queueing): the latency users feel
+    # on streaming responses; the one-shot engine has no per-request
+    # first-token timestamp (the whole batch blocks to completion)
+    t50_p, t95_p, _ = _percentiles(list(ttft_p.values()))
+    t50_c, t95_c, _ = _percentiles(list(ttft_c.values()))
     rows = [
         {"name": "serving_oneshot", "us_per_call": span_1 / n * 1e6,
-         "req_per_s": rps_1, "p50_s": p50_1, "p99_s": p99_1,
-         "n": n},
+         "req_per_s": rps_1, "p50_s": p50_1, "p95_s": p95_1,
+         "p99_s": p99_1, "n": n},
         {"name": "serving_continuous_pr1", "us_per_call": span_p / n * 1e6,
-         "req_per_s": rps_p, "p50_s": p50_p, "p99_s": p99_p,
+         "req_per_s": rps_p, "p50_s": p50_p, "p95_s": p95_p,
+         "p99_s": p99_p, "ttft_p50_s": t50_p, "ttft_p95_s": t95_p,
          "n": n, "stacked": 0, "bucketed_prefill": 0,
          "backpressure_ticks":
              cont_pr1.scheduler.stats.backpressure_ticks},
         {"name": "serving_continuous", "us_per_call": span_c / n * 1e6,
-         "req_per_s": rps_c, "p50_s": p50_c, "p99_s": p99_c,
+         "req_per_s": rps_c, "p50_s": p50_c, "p95_s": p95_c,
+         "p99_s": p99_c, "ttft_p50_s": t50_c, "ttft_p95_s": t95_c,
          "n": n, "stacked": int(cont.stacked),
          "bucketed_prefill": int(cont.bucketed),
          "backpressure_ticks":

@@ -1,0 +1,134 @@
+"""Train and serve concurrently in one process: the live deployment
+plane end to end (paper §2.4/§3: training is an always-on service;
+serving tracks it without restarts).
+
+    PYTHONPATH=src python examples/train_and_serve.py
+
+Wiring:
+
+ * a ``TrainingService`` advances asynchronous outer phases on a
+   background pool, writing per-module checkpoint rows;
+ * a ``Publisher`` (daemon thread, woken by the checkpoint DB's
+   listener API) cuts a candidate manifest when an outer phase
+   completes, canary-gates it on a held-out shadow trace, and promotes
+   it in the ``DeploymentRegistry``;
+ * a ``ContinuousBatchingEngine`` serves a Poisson request trace on the
+   main thread, hot-swapping to each promoted version between decode
+   ticks (drain policy: every request finishes on the version it was
+   admitted under).
+
+At the end the registry is rolled back one version and the engine
+swaps back — the same path operators take when a bad version slips
+through the gate.
+"""
+import os
+import tempfile
+import threading
+import time
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.data import SyntheticCorpus, shard_documents
+from repro.deploy import CanaryGate, DeploymentRegistry, Publisher
+from repro.infra import TrainingService
+from repro.models import api
+from repro.models.config import DiPaCoConfig
+from repro.serving import (ContinuousBatchingEngine, poisson_trace,
+                           prefix_hash_router)
+
+
+def main():
+    cfg = get_smoke_config("dipaco-150m").replace(route_prefix_len=8)
+    dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=4)
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, num_domains=4,
+                             seq_len=48, seed=0)
+    docs, doms = corpus.sample_documents(256, return_domains=True)
+    ds = shard_documents(docs, doms % 4, 4)
+    key = jax.random.PRNGKey(0)
+    base, _ = api.init_model(key, cfg)
+    num_paths = 4
+    phases = int(os.environ.get("PHASES", "3"))
+
+    with tempfile.TemporaryDirectory() as root:
+        print("== training service (async phase pipelining)")
+        svc = TrainingService(cfg, dcfg, ds, key=key,
+                              ckpt_root=os.path.join(root, "db"),
+                              base_params=base, batch_size=8,
+                              peak_lr=2e-3, warmup=10, total_steps=200,
+                              num_workers=2, max_phase_lag=1)
+
+        print("== deployment registry + canary-gated publisher")
+        registry = DeploymentRegistry(cfg, dcfg,
+                                      os.path.join(root, "deploy"),
+                                      key=key, base_params=base)
+        shadow = corpus.sample_documents(16, seed=99)[:, :32]
+        gate = CanaryGate(cfg, shadow, ppl_ratio_tol=1.5,
+                          min_agreement=0.0)
+        pub = Publisher(svc.db, registry, gate=gate)
+        pub.bootstrap()                  # v1 = base initialization
+        pub.start(period=0.2)            # woken by module-row writes
+
+        print("== engine serving from the registry (drain hot-swap)")
+        engine = ContinuousBatchingEngine(
+            cfg, registry=registry, cache_len=48, slots_per_path=2,
+            swap_policy="drain", route_fn=prefix_hash_router(num_paths))
+        engine.warmup()
+
+        trainer = threading.Thread(
+            target=lambda: svc.run(phases, tau=dcfg.inner_steps),
+            daemon=True)
+        t0 = time.time()
+        trainer.start()
+
+        trace = poisson_trace(64, rate=8.0, prompt_lens=[16],
+                              max_new=12, vocab_size=cfg.vocab_size,
+                              seed=3, corpus=corpus)
+        fins = []
+        i = 0
+        while trainer.is_alive() or i < len(trace) or not engine.idle:
+            now = time.time() - t0
+            while i < len(trace) and trace[i].arrival <= now:
+                engine.submit(trace[i])
+                i += 1
+            if engine.idle:
+                time.sleep(0.01)
+                continue
+            fins.extend(engine.step(now=now))
+        trainer.join()
+        # drain the publisher's last cycle, then let the engine swap
+        pub.publish_cycle()
+        fins.extend(engine.serve_trace(
+            poisson_trace(8, rate=50.0, prompt_lens=[16], max_new=12,
+                          vocab_size=cfg.vocab_size, seed=4,
+                          corpus=corpus)))
+
+        by_version: dict = {}
+        for f in fins:
+            by_version[f.version] = by_version.get(f.version, 0) + 1
+        lat = sorted(f.latency for f in fins)
+        ttft = sorted(f.ttft for f in fins)
+        print(f"== served {len(fins)} requests over versions "
+              f"{dict(sorted(by_version.items()))} "
+              f"({engine.swaps} hot swaps)")
+        print(f"   p50 latency {lat[len(lat) // 2] * 1e3:.0f}ms, "
+              f"p50 ttft {ttft[len(ttft) // 2] * 1e3:.0f}ms")
+        print(f"   publisher: published={pub.published} "
+              f"rejected={pub.rejected} rollbacks={pub.rollbacks}; "
+              f"registry versions {registry.versions}, "
+              f"serving v{registry.serving_version}")
+
+        print("== operator rollback")
+        prev = registry.rollback()
+        fins2 = engine.serve_trace(poisson_trace(
+            4, rate=50.0, prompt_lens=[16], max_new=8,
+            vocab_size=cfg.vocab_size, seed=5, corpus=corpus))
+        print(f"   serving v{registry.serving_version} (rolled back to "
+              f"{prev}); new requests finished on "
+              f"{sorted(set(f.version for f in fins2))}")
+        pub.close()
+        svc.shutdown()
+
+
+if __name__ == "__main__":
+    main()

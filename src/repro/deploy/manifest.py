@@ -1,0 +1,107 @@
+"""Deployment manifests: immutable descriptions of one servable model
+version.
+
+A DiPaCo "version" is not one weight blob — it is a *composition*: one
+checkpoint row per module (level, expert) plus the shared leaves
+(paper §2.3: a path is a choice of module per level; §2.4/App. A: each
+module checkpoints independently and continuously).  A manifest pins
+that composition: for every module id it records the content digest of
+the exact parameter payload, so
+
+ * two manifests that share a module reference share its bytes (shared
+   modules are materialized once and reused by every path through
+   them), and
+ * promote/rollback are exact — a version is its digest tuple, nothing
+   ambient.
+
+``file=None`` marks a module still at its base initialization (no outer
+update has been applied yet); the registry materializes those from its
+construction-time template, whose digest is recorded all the same.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import time
+from dataclasses import asdict, dataclass, field
+
+import jax
+import numpy as np
+
+# module id of the shared-leaves executor (embeddings / final norm)
+SHARED_ID = (-1, -1)
+
+
+def file_digest(path: str) -> str:
+    """Content hash of a checkpoint file (identity of a module payload)."""
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def tree_digest(tree) -> str:
+    """Content hash of a parameter pytree (used for base-init modules,
+    which have no checkpoint file to hash)."""
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(tree):
+        arr = np.asarray(leaf)
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+@dataclass(frozen=True)
+class ModuleRef:
+    """One module's pinned payload inside a manifest."""
+    level: int
+    expert: int
+    digest: str
+    file: str | None = None      # None = base initialization (template)
+    phase: int = -1              # outer phase of the applied update
+    step: int = -1               # executor update counter
+
+    @property
+    def module_id(self) -> tuple:
+        return (self.level, self.expert)
+
+
+@dataclass(frozen=True)
+class Manifest:
+    """A servable version: module-id -> pinned payload."""
+    version: int
+    refs: tuple                  # tuple[ModuleRef, ...]
+    parent: int = -1             # version this candidate was cut from
+    created_at: float = field(default_factory=time.time)
+    note: str = ""
+
+    def __post_init__(self):
+        ids = [r.module_id for r in self.refs]
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate module ids in manifest: {ids}")
+
+    @property
+    def by_id(self) -> dict:
+        return {r.module_id: r for r in self.refs}
+
+    @property
+    def signature(self) -> tuple:
+        """Digest tuple in module-id order — the version's identity."""
+        return tuple(r.digest for r in
+                     sorted(self.refs, key=lambda r: r.module_id))
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "version": self.version, "parent": self.parent,
+            "created_at": self.created_at, "note": self.note,
+            "refs": [asdict(r) for r in self.refs]}, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Manifest":
+        d = json.loads(text)
+        return cls(version=d["version"], parent=d.get("parent", -1),
+                   created_at=d.get("created_at", 0.0),
+                   note=d.get("note", ""),
+                   refs=tuple(ModuleRef(**r) for r in d["refs"]))

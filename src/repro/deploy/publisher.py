@@ -1,0 +1,178 @@
+"""Publisher: the control loop that turns training-plane checkpoint
+rows into promoted serving versions.
+
+Subscribes to the checkpoint DB's listener API (no polling of
+``wait_for``): every ``kind="module"`` row — one per applied outer
+update, written by the sharded executors — wakes the publisher.  When
+every module of the partition has applied outer phase ``t`` (the phase
+is *complete*), the publisher cuts a candidate manifest from the latest
+row per module, canary-gates it against the serving version on the
+shadow trace, and promotes it on pass.  An optional bake gate re-scores
+the freshly promoted version on a second, disjoint shadow trace and
+rolls back automatically on regression; rejected or rolled-back
+compositions are quarantined so a bad version is never re-promoted.
+
+The cycle itself is synchronous and cheap when there is nothing to do
+(``publish_cycle``), which keeps tests deterministic; ``start()`` wraps
+it in a daemon thread driven by the DB listener for live deployments
+(examples/train_and_serve.py).
+"""
+from __future__ import annotations
+
+import threading
+
+from .manifest import Manifest
+
+
+class Publisher:
+    def __init__(self, db, registry, *, gate=None, bake_gate=None,
+                 auto_rollback: bool = True):
+        self.db = db
+        self.registry = registry
+        self.gate = gate
+        self.bake_gate = bake_gate
+        self.auto_rollback = auto_rollback
+        self.published = 0
+        self.rejected = 0
+        self.rollbacks = 0
+        self.cycle_errors = 0
+        self.last_error: Exception | None = None
+        self._quarantined: set = set()    # signatures never to re-promote
+        self._event = threading.Event()
+        self._stop = threading.Event()
+        self._thread = None
+        self._cycle_lock = threading.Lock()
+        # resume: don't re-cut a phase an earlier process already
+        # published (manifest refs record the phase of every module row)
+        latest = registry.latest_manifest()
+        self._last_cut_phase = (min(r.phase for r in latest.refs)
+                                if latest is not None else -1)
+        db.add_listener(self._on_row)
+
+    # -- event plumbing ------------------------------------------------
+    def _on_row(self, row) -> None:
+        if row.kind == "module":
+            self._event.set()
+
+    def close(self) -> None:
+        self._stop.set()
+        self._event.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        self.db.remove_listener(self._on_row)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- bootstrap -----------------------------------------------------
+    def bootstrap(self) -> Manifest:
+        """Ensure a serving version exists before any outer update has
+        landed: register (and promote) the base-template composition."""
+        m = self.registry.register(note="bootstrap: base initialization")
+        if self.registry.serving_version is None:
+            self.registry.promote(m.version)
+        return m
+
+    # -- candidate detection -------------------------------------------
+    def _scan(self):
+        """(completed phase, latest module row per id).  Rows are in
+        commit order, so the last row per module is its newest."""
+        latest: dict = {}
+        for r in self.db.rows(kind="module"):
+            latest[(r.level, r.expert)] = r
+        completed = min((latest[mid].phase if mid in latest else -1
+                         for mid in self.registry.module_ids), default=-1)
+        return completed, latest
+
+    def completed_phase(self) -> int:
+        """Highest outer phase applied by *every* module (-1 if any
+        module has no applied update yet)."""
+        return self._scan()[0]
+
+    def poll(self) -> Manifest | None:
+        """Cut a candidate manifest if a new outer phase completed."""
+        completed, latest = self._scan()
+        if completed <= self._last_cut_phase:
+            return None
+        m = self.registry.register(latest,
+                                   note=f"outer phase {completed} complete")
+        self._last_cut_phase = completed
+        return m
+
+    # -- the deployment cycle ------------------------------------------
+    def publish_cycle(self) -> dict:
+        """One full cycle: detect -> cut -> canary -> promote (or
+        reject) -> bake -> rollback on regression."""
+        with self._cycle_lock:
+            out = {"cut": None, "promoted": None, "rejected": None,
+                   "rolled_back": None, "report": None}
+            m = self.poll()
+            if m is None:
+                return out
+            out["cut"] = m.version
+            if m.signature in self._quarantined:
+                out["rejected"] = m.version
+                self.rejected += 1
+                return out
+            prev = self.registry.serving_version
+            if prev is not None and prev == m.version:
+                return out
+            if self.gate is not None and prev is not None:
+                report = self.gate.evaluate(
+                    self.registry.materialize(m.version),
+                    self.registry.serving_paths())
+                out["report"] = report
+                if not report.passed:
+                    self._quarantined.add(m.signature)
+                    self.rejected += 1
+                    out["rejected"] = m.version
+                    return out
+            self.registry.promote(m.version)
+            self.published += 1
+            out["promoted"] = m.version
+            if self.bake_gate is not None and prev is not None:
+                bake = self.bake_gate.evaluate(
+                    self.registry.serving_paths(),
+                    self.registry.materialize(prev))
+                out["report"] = bake
+                if not bake.passed and self.auto_rollback:
+                    self._quarantined.add(m.signature)
+                    self.registry.rollback()
+                    self.rollbacks += 1
+                    out["rolled_back"] = m.version
+                    out["promoted"] = None
+            return out
+
+    # -- background mode -----------------------------------------------
+    def start(self, period: float = 0.5) -> "Publisher":
+        """Run publish cycles on a daemon thread, woken by module-row
+        writes (and at least every ``period`` seconds as a fallback)."""
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                self._event.wait(timeout=period)
+                self._event.clear()
+                if self._stop.is_set():
+                    return
+                try:
+                    self.publish_cycle()
+                except Exception as e:  # noqa: BLE001
+                    # an always-on publisher must survive transient
+                    # failures (disk full, a row GC'd mid-cut, gate
+                    # scoring errors): a dead daemon would leave
+                    # engines silently serving stale weights forever
+                    self.cycle_errors += 1
+                    self.last_error = e
+
+        self._thread = threading.Thread(target=loop, name="publisher",
+                                        daemon=True)
+        self._thread.start()
+        return self

@@ -1,6 +1,8 @@
 """Checkpoint metadata table (the paper's Spanner table, §3 step 2) +
 npz checkpoint store (the paper's GFS).  Watchers (outer executors, eval
-workers) poll for rows they have not consumed yet.
+workers) poll for rows they have not consumed yet via ``wait_for``;
+push-style subscribers (the deployment publisher) register a listener
+with ``add_listener`` and are called on every committed write.
 
 The DB doubles as the training service's *recovery substrate*: every
 row is appended to ``rows.jsonl`` inside the root so a restarted
@@ -67,6 +69,14 @@ def load_tree(file: str, like):
             raise ValueError(
                 f"checkpoint {file} leaf_{i} has shape {leaf.shape}, "
                 f"template expects {np.shape(ref)}")
+        want = np.dtype(getattr(ref, "dtype", None) or np.result_type(ref))
+        if np.dtype(leaf.dtype) != want:
+            raise ValueError(
+                f"checkpoint {file} leaf_{i} has dtype {leaf.dtype}, "
+                f"template expects {want} — loading would silently "
+                f"reinterpret the payload (e.g. a float32 row into an "
+                f"int8-quantized slot); use a template with matching "
+                f"dtypes")
         loaded.append(leaf)
     return jax.tree_util.tree_unflatten(treedef, loaded)
 
@@ -78,6 +88,8 @@ class CheckpointDB:
         self.max_rows_per_path = max_rows_per_path
         self._lock = threading.Condition()
         self._rows: list = []
+        self._listeners: list = []
+        self.listener_errors = 0
         self._log = os.path.join(root, "rows.jsonl")
         if os.path.exists(self._log):
             with open(self._log) as f:
@@ -114,13 +126,42 @@ class CheckpointDB:
                 with open(self._log, "a") as f:
                     f.write(json.dumps(asdict(row)) + "\n")
             self._lock.notify_all()
+            listeners = list(self._listeners)
         for r in dropped:
             if r.file != file:     # a retried write may reuse the name
                 try:
                     os.remove(r.file)
                 except OSError:
                     pass
+        # listeners run outside the lock (a listener may read the DB or
+        # block briefly) but after the row is committed, so a subscriber
+        # observing the event always finds the row via rows().  A
+        # listener failure must not propagate into the checkpoint
+        # writer's thread — the row is already durable, and crashing the
+        # executor apply path over a subscriber bug would take down
+        # training.
+        for fn in listeners:
+            try:
+                fn(row)
+            except Exception:  # noqa: BLE001
+                self.listener_errors += 1
         return row
+
+    # -- event subscription (deploy plane) ------------------------------
+    def add_listener(self, fn) -> None:
+        """Subscribe ``fn(row)`` to every committed write — the push
+        counterpart of :meth:`wait_for` (which stays for pollers).  The
+        callback runs on the writer's thread; keep it short (set an
+        event, enqueue) and never write to the DB from inside it."""
+        with self._lock:
+            self._listeners.append(fn)
+
+    def remove_listener(self, fn) -> None:
+        with self._lock:
+            try:
+                self._listeners.remove(fn)
+            except ValueError:
+                pass
 
     def _gc_locked(self, row: CkptRow) -> list:
         group = [r for r in self._rows if self._group(r) == self._group(row)]

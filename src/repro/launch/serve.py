@@ -1,8 +1,19 @@
 """Serving launcher: routes batched requests to path replicas.
 
+    # one-shot baseline over randomly initialized paths
     PYTHONPATH=src python -m repro.launch.serve --arch dipaco-150m \
-        --paths 4 --requests 8 --max-new 16 [--reroute-every 8] \
-        [--continuous --rate 40]
+        --paths 4 --requests 8 --max-new 16 [--reroute-every 8]
+
+    # continuous-batching engine fed by a Poisson trace
+    PYTHONPATH=src python -m repro.launch.serve --engine continuous \
+        --rate 40
+
+    # serve the promoted version of a deployment registry (written by
+    # examples/train_and_serve.py or a Publisher), hot-swapping when
+    # the serving pointer moves
+    PYTHONPATH=src python -m repro.launch.serve --engine continuous \
+        --deploy-root /tmp/dipaco_deploy --levels 2x2 \
+        --swap-policy drain
 """
 from __future__ import annotations
 
@@ -10,47 +21,77 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.models import api
 from repro.data import SyntheticCorpus
+from repro.models import api
+from repro.models.config import DiPaCoConfig
 from repro.serving import (ContinuousBatchingEngine, PathServingEngine,
-                           poisson_trace)
+                           poisson_trace, prefix_hash_router)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="dipaco-150m")
+    ap.add_argument("--engine", choices=["oneshot", "continuous"],
+                    default="oneshot")
+    ap.add_argument("--continuous", action="store_true",
+                    help="deprecated alias for --engine continuous")
     ap.add_argument("--paths", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--reroute-every", type=int, default=0)
-    ap.add_argument("--continuous", action="store_true",
-                    help="continuous-batching engine fed by a Poisson "
-                         "arrival trace instead of one synchronous batch")
     ap.add_argument("--rate", type=float, default=40.0,
-                    help="Poisson arrival rate (req/s) for --continuous")
+                    help="Poisson arrival rate (req/s), continuous engine")
     ap.add_argument("--slots", type=int, default=8,
-                    help="cache slots per path island for --continuous")
+                    help="cache slots per path island, continuous engine")
+    ap.add_argument("--deploy-root", default=None,
+                    help="serve from the DeploymentRegistry at this root "
+                         "(the promoted serving version) instead of "
+                         "randomly initialized paths")
+    ap.add_argument("--levels", default="2x2",
+                    help="partition levels of the deployment (--deploy-"
+                         "root), e.g. 2x2; must match the training run")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base-init seed of the deployment (--deploy-root);"
+                         " must match the training run")
+    ap.add_argument("--swap-policy", choices=["drain", "live"],
+                    default="drain",
+                    help="hot-swap pinning policy when the registry's "
+                         "serving version moves mid-trace")
     args = ap.parse_args()
+    engine_kind = "continuous" if args.continuous else args.engine
 
     cfg = get_smoke_config(args.arch).replace(route_prefix_len=8)
     corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, num_domains=4,
                              seq_len=args.prompt_len, seed=0)
     prompts = corpus.sample_documents(args.requests)
-    key = jax.random.PRNGKey(0)
-    paths = []
-    for p in range(args.paths):
-        params, _ = api.init_model(jax.random.fold_in(key, p), cfg)
-        paths.append(params)
     cache_len = args.prompt_len + args.max_new
-    if args.continuous:
+
+    registry = None
+    if args.deploy_root:
+        from repro.deploy import DeploymentRegistry
+        levels = tuple(int(x) for x in args.levels.split("x"))
+        registry = DeploymentRegistry(
+            cfg, DiPaCoConfig(levels=levels), args.deploy_root,
+            key=jax.random.PRNGKey(args.seed))
+        num_paths = registry.num_paths
+        print(f"[serve] registry {args.deploy_root}: versions "
+              f"{registry.versions}, serving v{registry.serving_version}")
+        paths = None
+    else:
+        key = jax.random.PRNGKey(args.seed)
+        num_paths = args.paths
+        paths = [api.init_model(jax.random.fold_in(key, p), cfg)[0]
+                 for p in range(num_paths)]
+
+    if engine_kind == "continuous":
         engine = ContinuousBatchingEngine(
-            cfg, paths, cache_len=cache_len, slots_per_path=args.slots,
-            reroute_every=args.reroute_every)
+            cfg, paths, registry=registry, swap_policy=args.swap_policy,
+            cache_len=cache_len, slots_per_path=args.slots,
+            reroute_every=args.reroute_every,
+            route_fn=prefix_hash_router(num_paths))
         trace = poisson_trace(args.requests, rate=args.rate,
                               prompt_lens=[args.prompt_len],
                               max_new=args.max_new,
@@ -61,14 +102,21 @@ def main() -> None:
         dt = time.time() - t0
         toks = args.requests * args.max_new
         lat = sorted(f.latency for f in fins)
+        ttft = sorted(f.ttft for f in fins)
         print(f"[serve] {toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s) "
               f"over {engine.ticks} ticks, "
               f"p50 latency {lat[len(lat) // 2] * 1e3:.0f}ms, "
+              f"p50 ttft {ttft[len(ttft) // 2] * 1e3:.0f}ms, "
               f"switches={sum(f.switches for f in fins)}")
+        if registry is not None:
+            print(f"[serve] served version(s) "
+                  f"{sorted(set(f.version for f in fins))}, "
+                  f"hot swaps={engine.swaps}")
         print(f"[serve] request->path: "
               f"{[f.path for f in sorted(fins, key=lambda f: f.rid)]}")
         return
-    engine = PathServingEngine(cfg, paths, cache_len=cache_len)
+    engine = PathServingEngine(cfg, paths, registry=registry,
+                               cache_len=cache_len)
     t0 = time.time()
     res = engine.generate(prompts, max_new=args.max_new,
                           reroute_every=args.reroute_every)
@@ -76,6 +124,8 @@ def main() -> None:
     toks = args.requests * args.max_new
     print(f"[serve] {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s), switches={res.switches}")
+    if registry is not None:
+        print(f"[serve] serving version v{engine.version}")
     print(f"[serve] request->path: {res.paths.tolist()}")
 
 

@@ -1,4 +1,5 @@
 from .cache import SlotArena, SlotExhausted, StackedSlotArenas
 from .engine import (ContinuousBatchingEngine, FinishedRequest,
                      GenerationResult, PathServingEngine)
-from .scheduler import Request, Scheduler, poisson_trace
+from .scheduler import (Request, Scheduler, poisson_trace,
+                        prefix_hash_router)

@@ -16,6 +16,26 @@ Two engines share the routing/feature machinery:
   re-prefilling only into a freshly allocated slot on the target path
   and evicting the source slot — the §6 KV-recompute limitation,
   implemented honestly but incrementally.
+
+Both engines optionally serve from a deployment registry
+(repro/deploy): instead of a fixed ``path_params_list`` they take a
+``registry`` handle and hot-swap the whole path set *between decode
+ticks* whenever the registry's tagged serving version moves (promote or
+rollback).  Swaps never recompile — shapes and dtypes are unchanged, so
+every warmed jit entry stays valid; the stacked param tree is
+double-buffered with the old buffers donated to the new stack.  The
+per-request pinning policy is chosen at construction:
+
+* ``swap_policy="drain"`` — in-flight requests finish on the version
+  they were admitted under: admissions pause (scheduler backpressure)
+  until the arenas drain, then the new version installs.  Requests
+  admitted after the swap are token-identical to a freshly constructed
+  engine on the new parameters.
+* ``swap_policy="live"`` — the new version installs immediately and
+  every in-flight request is migrated onto it mid-stream by
+  re-prefilling its running text into its slot (the §2.4.3 migration
+  machinery, minus the island move).  Token divergence is accepted and
+  the affected requests are flagged ``swapped_midstream``.
 """
 from __future__ import annotations
 
@@ -76,48 +96,94 @@ class FinishedRequest:
     arrival: float
     admitted_at: float
     finished_at: float
+    first_token_at: float = 0.0
+    version: int = -1           # registry version the request finished on
+    swapped_midstream: bool = False   # a live hot-swap hit this request
 
     @property
     def latency(self) -> float:
         return self.finished_at - self.arrival
 
+    @property
+    def ttft(self) -> float:
+        """Time to first generated token."""
+        return self.first_token_at - self.arrival
+
 
 class _EngineBase:
-    """Shared routing / feature plumbing."""
+    """Shared routing / feature / registry plumbing."""
 
-    def __init__(self, cfg: ModelConfig, path_params_list, *, router=None,
-                 feat_params=None, cache_len: int = 512):
+    def __init__(self, cfg: ModelConfig, path_params_list=None, *,
+                 router=None, feat_params=None, cache_len: int = 512,
+                 registry=None, swap_policy: str = "drain",
+                 route_fn=None):
         self.cfg = cfg
+        if router is not None and route_fn is not None:
+            raise ValueError("pass either router (feature-based) or "
+                             "route_fn (prompt -> path id), not both")
+        if registry is not None:
+            if path_params_list is not None:
+                raise ValueError(
+                    "pass either path_params_list or registry, not both")
+            self._version, path_params_list = registry.serving()
+        elif path_params_list is None:
+            raise ValueError("either path_params_list or a registry "
+                             "handle is required")
+        else:
+            self._version = -1
+        if swap_policy not in ("drain", "live"):
+            raise ValueError(f"swap_policy must be 'drain' or 'live', "
+                             f"got {swap_policy!r}")
+        self.registry = registry
+        self.swap_policy = swap_policy
         self.paths = path_params_list
         self.router = router
+        self.route_fn = route_fn
         self.feat_params = feat_params
         self.cache_len = cache_len
 
         cfg_ = cfg
+        # bind only the feature params, not the whole path list: the
+        # closure must not pin a superseded version's full parameter
+        # set in memory after a hot swap
+        feat_src = feat_params if feat_params is not None \
+            else path_params_list[0]
 
         @jax.jit
         def _feats(tokens):
-            h, _ = apply_lm(feat_params if feat_params is not None
-                            else path_params_list[0], cfg_, tokens,
-                            return_hidden=True)
+            h, _ = apply_lm(feat_src, cfg_, tokens, return_hidden=True)
             return jnp.mean(h.astype(jnp.float32), axis=1)
 
         self._feats = _feats
 
     def route(self, tokens) -> np.ndarray:
+        if self.route_fn is not None:
+            return np.asarray([self.route_fn(t) for t in tokens], np.int32)
         if self.router is None:
             return np.zeros(tokens.shape[0], np.int32)
         z = self._feats(jnp.asarray(tokens[:, :self.cfg.route_prefix_len]))
         return np.asarray(self.router.assign(z))
 
+    @property
+    def version(self) -> int:
+        """Registry version currently installed (-1: no registry).
+        NOTE: routing features (``_feats``) stay pinned to the
+        construction-time parameters — the router is versioned with the
+        deployment, not with every weight swap."""
+        return self._version
+
 
 class PathServingEngine(_EngineBase):
     """One-shot batch engine (baseline): synchronous generate per batch."""
 
-    def __init__(self, cfg: ModelConfig, path_params_list, *, router=None,
-                 feat_params=None, cache_len: int = 512):
+    def __init__(self, cfg: ModelConfig, path_params_list=None, *,
+                 router=None, feat_params=None, cache_len: int = 512,
+                 registry=None, swap_policy: str = "drain",
+                 route_fn=None):
         super().__init__(cfg, path_params_list, router=router,
-                         feat_params=feat_params, cache_len=cache_len)
+                         feat_params=feat_params, cache_len=cache_len,
+                         registry=registry, swap_policy=swap_policy,
+                         route_fn=route_fn)
         cfg_ = cfg
 
         def _decode(params, tok, cache, idx):
@@ -129,6 +195,17 @@ class PathServingEngine(_EngineBase):
         # always rebinds its reference to the returned cache)
         self._decode = jax.jit(_decode, donate_argnums=2)
         self._last_cache = None
+
+    def poll_registry(self) -> bool:
+        """Install the registry's serving version if it moved.  Called
+        between ``generate`` batches — trivially drain semantics, since
+        the one-shot engine holds no in-flight state across calls."""
+        if self.registry is None:
+            return False
+        if self.registry.serving_version == self._version:
+            return False
+        self._version, self.paths = self.registry.serving()
+        return True
 
     def device_state(self):
         """Device buffers still possibly in flight (for benchmark
@@ -156,6 +233,7 @@ class PathServingEngine(_EngineBase):
         behavior, kept for baseline stability); the continuous engine
         re-routes per request, so the engines only match token-for-token
         under re-routing for single-request groups."""
+        self.poll_registry()
         prompts = np.asarray(prompts)
         b, s0 = prompts.shape
         assign = self.route(prompts)
@@ -218,15 +296,21 @@ class ContinuousBatchingEngine(_EngineBase):
     would absorb pad tokens).
     """
 
-    def __init__(self, cfg: ModelConfig, path_params_list, *, router=None,
-                 feat_params=None, cache_len: int = 512,
+    def __init__(self, cfg: ModelConfig, path_params_list=None, *,
+                 router=None, feat_params=None, cache_len: int = 512,
                  slots_per_path: int = 8, reroute_every: int = 0,
                  stacked: Optional[bool] = None,
                  bucketed_prefill: Optional[bool] = None,
-                 prefill_buckets=None):
+                 prefill_buckets=None, registry=None,
+                 swap_policy: str = "drain", route_fn=None):
         super().__init__(cfg, path_params_list, router=router,
-                         feat_params=feat_params, cache_len=cache_len)
+                         feat_params=feat_params, cache_len=cache_len,
+                         registry=registry, swap_policy=swap_policy,
+                         route_fn=route_fn)
+        path_params_list = self.paths     # resolved by the base (registry)
         self.reroute_every = reroute_every
+        self.swaps = 0
+        self.last_swap_tick = -1
         num_paths = len(path_params_list)
         homog = _paths_homogeneous(path_params_list)
         self.stacked = homog if stacked is None else stacked
@@ -325,6 +409,83 @@ class ContinuousBatchingEngine(_EngineBase):
 
         self._decode_island = jax.jit(_decode_island, donate_argnums=3)
 
+        def _restack(old, *new):
+            return jax.tree_util.tree_map(
+                lambda o, *ns: jnp.stack(ns).astype(o.dtype), old, *new)
+
+        # hot-swap double-buffering: the outgoing stacked tree is
+        # donated, so XLA reuses its buffers for the incoming stack
+        # instead of holding both full param sets alive
+        self._restack = jax.jit(_restack, donate_argnums=0)
+
+    # -- hot swap (deployment registry) --------------------------------
+    def _install(self, version: int, paths) -> None:
+        """Swap the serving parameters between ticks.  Never recompiles:
+        the new version has identical shapes/dtypes (same partition), so
+        every warmed prefill/decode jit entry stays valid."""
+        self.paths = list(paths)
+        if self.stacked:
+            self._stacked_params = self._restack(self._stacked_params,
+                                                 *self.paths)
+        self._version = version
+        self.swaps += 1
+        self.last_swap_tick = self.ticks
+
+    def _poll_swap(self) -> bool:
+        """Install a new serving version if the registry moved; returns
+        True while a drain-policy swap is pending (admissions pause)."""
+        if self.registry is None:
+            return False
+        if self.registry.serving_version == self._version:
+            return False
+        version, paths = self.registry.serving()
+        if version == self._version:
+            return False
+        if self.swap_policy == "live":
+            self._install(version, paths)
+            self._reprefill_inflight()
+            return False
+        if self.in_flight:
+            # drain: in-flight requests finish on their admitted
+            # version; new admissions wait (scheduler backpressure)
+            return True
+        self._install(version, paths)
+        return False
+
+    def _prefill_running(self, path: int, tokens):
+        """Re-prefill a request's full running text on island ``path``
+        (the §2.4.3 migration primitive shared by re-route moves and
+        live hot-swaps): returns (next-token logits row, cache)."""
+        n = len(tokens)
+        if self.bucketed:
+            length = self._bucket(n)
+            tok = np.zeros((1, length), np.int32)
+            tok[0, :n] = tokens
+            logits, cache = self._prefill_bucketed(
+                self.paths[path], jnp.asarray(tok),
+                jnp.asarray([n - 1], np.int32))
+        else:
+            logits, cache = self._prefill(
+                self.paths[path],
+                jnp.asarray(np.asarray(tokens, np.int32)[None]))
+        return np.asarray(logits)[0], cache
+
+    def _reprefill_inflight(self) -> None:
+        """Live-swap migration: rebuild every in-flight request's cache
+        on the just-installed version by re-prefilling its running text
+        into its slot (the §2.4.3 migration machinery, minus the island
+        move).  The continuation diverges from both the old-version
+        stream and a fresh new-version generation — accepted, and the
+        request is flagged."""
+        for st in self.in_flight.values():
+            logits, cache = self._prefill_running(st.path, st.tokens)
+            self.arenas[st.path].write_slots(cache, [st.slot],
+                                             [len(st.tokens)])
+            st.next_logits = logits
+            st.prefilled_this_tick = True
+            st.swapped_midstream = True
+            st.version = self._version
+
     def device_state(self):
         """Device buffers still possibly in flight (for benchmark
         ``block_until_ready`` before reading the wall clock)."""
@@ -380,6 +541,11 @@ class ContinuousBatchingEngine(_EngineBase):
             _, sa.cache = self._decode_island(
                 self.paths[0], jnp.int32(0), tok[0], sa.cache,
                 jnp.asarray(sa.positions[0]), mask[0])
+            # warm the hot-swap install too: the swap contract is "no
+            # compile inside a serving tick", which must include the
+            # first swap's restack dispatch
+            self._stacked_params = self._restack(self._stacked_params,
+                                                 *self.paths)
         else:
             for p, params in enumerate(self.paths):
                 arena = self.arenas[p]
@@ -403,6 +569,8 @@ class ContinuousBatchingEngine(_EngineBase):
         self.scheduler.submit(req)
 
     def _route_prompt(self, prompt: np.ndarray) -> int:
+        if self.route_fn is not None:
+            return int(self.route_fn(prompt))
         if self.router is None:
             return 0
         z = self._feats(
@@ -413,11 +581,18 @@ class ContinuousBatchingEngine(_EngineBase):
     def step(self, now: float = 0.0) -> List[FinishedRequest]:
         """Advance the engine one tick; returns requests finished now."""
         self.ticks += 1
+        draining = self._poll_swap()
         self.scheduler.route_arrivals(self._route_prompt)
-        admissions = self.scheduler.admissions(
-            {p: a.num_free for p, a in enumerate(self.arenas)})
-        for p, reqs in admissions.items():
-            self._admit(p, reqs, now)
+        if not draining:
+            admissions = self.scheduler.admissions(
+                {p: a.num_free for p, a in enumerate(self.arenas)})
+            for p, reqs in admissions.items():
+                self._admit(p, reqs, now)
+        elif self.scheduler.pending:
+            # the drain pause is backpressure too: requests are waiting
+            # on the swap, not on slots — count it so the stat reflects
+            # every admission stall an operator would see
+            self.scheduler.stats.backpressure_ticks += 1
         self._decode_tick()
         return self._emit_tick(now)
 
@@ -448,7 +623,8 @@ class ContinuousBatchingEngine(_EngineBase):
                     req=r, path=path, slot=slot,
                     tokens=list(map(int, r.prompt)),
                     next_logits=np.asarray(logits)[0],
-                    prefilled_this_tick=True, admitted_at=now)
+                    prefilled_this_tick=True, admitted_at=now,
+                    version=self._version)
             return
         groups: Dict[int, List[Request]] = {}
         for r in reqs:
@@ -471,7 +647,8 @@ class ContinuousBatchingEngine(_EngineBase):
                     req=r, path=path, slot=slots[i],
                     tokens=list(map(int, r.prompt)),
                     next_logits=logits[i],
-                    prefilled_this_tick=True, admitted_at=now)
+                    prefilled_this_tick=True, admitted_at=now,
+                    version=self._version)
 
     def _decode_tick(self) -> None:
         """Advance every in-flight request one token.
@@ -542,13 +719,17 @@ class ContinuousBatchingEngine(_EngineBase):
         for st in list(self.in_flight.values()):
             st.prefilled_this_tick = False
             st.tokens.append(int(np.argmax(st.next_logits)))
+            if st.first_token_at is None:
+                st.first_token_at = now
             if st.done:
                 self.arenas[st.path].free(st.slot)
                 fin = FinishedRequest(
                     rid=st.req.rid, tokens=np.asarray(st.tokens, np.int32),
                     path=st.path, switches=st.switches,
                     arrival=st.req.arrival, admitted_at=st.admitted_at,
-                    finished_at=now)
+                    finished_at=now, first_token_at=st.first_token_at,
+                    version=st.version,
+                    swapped_midstream=st.swapped_midstream)
                 done.append(fin)
                 del self.in_flight[st.req.rid]
                 self.scheduler.record_completion()
@@ -575,22 +756,11 @@ class ContinuousBatchingEngine(_EngineBase):
         slot = self.arenas[new_p].try_alloc()
         if slot is None:
             return
-        n = len(st.tokens)
-        if self.bucketed:
-            length = self._bucket(n)
-            tok = np.zeros((1, length), np.int32)
-            tok[0, :n] = st.tokens
-            logits, cache = self._prefill_bucketed(
-                self.paths[new_p], jnp.asarray(tok),
-                jnp.asarray([n - 1], np.int32))
-        else:
-            logits, cache = self._prefill(
-                self.paths[new_p],
-                jnp.asarray(np.asarray(st.tokens, np.int32)[None]))
+        logits, cache = self._prefill_running(new_p, st.tokens)
         self.arenas[new_p].write_slots(cache, [slot], [len(st.tokens)])
         self.arenas[st.path].free(st.slot)
         st.path, st.slot = new_p, slot
-        st.next_logits = np.asarray(logits)[0]
+        st.next_logits = logits
         st.switches += 1
         st.prefilled_this_tick = True
 

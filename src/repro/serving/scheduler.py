@@ -39,6 +39,9 @@ class RequestState:
     switches: int = 0
     prefilled_this_tick: bool = False
     admitted_at: float = 0.0
+    version: int = -1             # registry version admitted under
+    swapped_midstream: bool = False   # a live hot-swap hit this request
+    first_token_at: Optional[float] = None
 
     @property
     def emitted(self) -> int:
@@ -108,6 +111,19 @@ class Scheduler:
 
     def record_completion(self, n: int = 1) -> None:
         self.stats.completed += n
+
+
+def prefix_hash_router(num_paths: int, prefix_len: int = 8):
+    """Deterministic prompt-hash routing over ``num_paths`` islands.
+
+    Spreads a trace identically for every engine without training a
+    router — the standard route_fn for benchmarks, demos and the CLI
+    (token-identity comparisons across engines stay meaningful).
+    """
+    def route(prompt) -> int:
+        return int(np.asarray(prompt[:prefix_len], np.int64).sum()) \
+            % num_paths
+    return route
 
 
 def poisson_trace(n: int, *, rate: float, prompt_lens, max_new: int,

@@ -1,0 +1,613 @@
+"""Deployment plane: manifest/registry composition, checkpoint-DB
+listener API, publisher canary cycle, engine hot-swap (drain/live) and
+the train-and-serve acceptance path."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.module_store import ModuleStore
+from repro.core.partition import make_partition
+from repro.deploy import (CanaryGate, CanaryReport, DeploymentRegistry,
+                          Manifest, ModuleRef, Publisher)
+from repro.infra import CheckpointDB, ShardedOuterExecutors
+from repro.infra.ckpt_db import load_tree, save_tree
+from repro.models.config import DiPaCoConfig
+from repro.optim.nesterov import nesterov_init
+from repro.serving import (ContinuousBatchingEngine, PathServingEngine,
+                           Request)
+
+
+# ---------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------
+
+def _delta(base, v):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.full(x.shape, v, jnp.float32), base)
+
+
+def _tree32(tree):
+    return jax.tree_util.tree_map(
+        lambda x: None if x is None else x.astype(jnp.float32), tree)
+
+
+@pytest.fixture()
+def plane(tiny_cfg, tiny_base, tmp_path):
+    """Training-side store/executors/db plus a registry, wired like one
+    deployment (4 paths, levels (2, 2))."""
+    base, axes = tiny_base
+    dcfg = DiPaCoConfig(levels=(2, 2))
+    part = make_partition(dcfg, tiny_cfg.pattern_repeats)
+    db = CheckpointDB(str(tmp_path / "db"))
+    store = ModuleStore(base, axes, part)
+    execs = ShardedOuterExecutors(store, part, np.arange(4), ckpt_db=db)
+    reg = DeploymentRegistry(tiny_cfg, dcfg, str(tmp_path / "deploy"),
+                             key=jax.random.PRNGKey(0), base_params=base)
+    return dict(cfg=tiny_cfg, dcfg=dcfg, base=base, part=part, db=db,
+                store=store, execs=execs, reg=reg, tmp=tmp_path)
+
+
+def _outer_phase(pl, phase, scale=0.01):
+    """Drive one full outer phase: every worker reports, every executor
+    applies, one module row per executor lands in the DB."""
+    for w in range(4):
+        pl["execs"].accumulate(w, _delta(pl["base"], scale * (w + 1)),
+                               phase=phase)
+
+
+def _latest_module_rows(db):
+    latest = {}
+    for r in db.rows(kind="module"):
+        latest[(r.level, r.expert)] = r
+    return latest
+
+
+def _assert_paths_equal(a, b):
+    for pa, pb in zip(a, b):
+        for x, y in zip(jax.tree_util.tree_leaves(pa),
+                        jax.tree_util.tree_leaves(pb)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _prompt(cfg, n=16, seed=11):
+    return np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (n,),
+                                         0, cfg.vocab_size), np.int32)
+
+
+# ---------------------------------------------------------------------
+# checkpoint DB: listener API + dtype validation (satellites)
+# ---------------------------------------------------------------------
+
+def test_db_listener_api(tmp_path):
+    db = CheckpointDB(str(tmp_path))
+    seen = []
+    db.add_listener(seen.append)
+    row = db.write({"a": jnp.ones(2)}, path_id=0, phase=0, step=0)
+    assert seen == [row]
+    # the row is committed before the listener runs: visible via rows()
+    got = []
+    db.add_listener(lambda r: got.append(len(db.rows())))
+    db.write({"a": jnp.ones(2)}, path_id=0, phase=1, step=1)
+    assert got == [2]
+    db.remove_listener(seen.append)
+    db.write({"a": jnp.ones(2)}, path_id=0, phase=2, step=2)
+    assert len(seen) == 2          # removed listener no longer called
+    db.remove_listener(seen.append)    # idempotent
+
+    # a broken listener is contained: the write (on the training
+    # thread) must not die over a subscriber bug
+    def boom(row):
+        raise RuntimeError("subscriber bug")
+
+    db.add_listener(boom)
+    tail = []
+    db.add_listener(tail.append)
+    row = db.write({"a": jnp.ones(2)}, path_id=0, phase=3, step=3)
+    assert db.listener_errors == 1
+    assert tail == [row]           # later listeners still ran
+    assert len(db.rows()) == 4     # the row committed
+
+
+def test_load_tree_validates_dtype(tmp_path):
+    f = str(tmp_path / "t.npz")
+    save_tree(f, {"a": jnp.ones((2, 3), jnp.float32)})
+    with pytest.raises(ValueError, match="dtype"):
+        load_tree(f, {"a": jnp.ones((2, 3), jnp.int8)})
+    back = load_tree(f, {"a": jnp.zeros((2, 3), jnp.float32)})
+    np.testing.assert_array_equal(np.asarray(back["a"]), 1.0)
+
+
+# ---------------------------------------------------------------------
+# manifest
+# ---------------------------------------------------------------------
+
+def test_manifest_roundtrip_and_signature():
+    refs = (ModuleRef(level=0, expert=0, digest="aa", file="x.npz",
+                      phase=3, step=7),
+            ModuleRef(level=-1, expert=-1, digest="bb"))
+    m = Manifest(version=2, refs=refs, parent=1, note="test")
+    back = Manifest.from_json(m.to_json())
+    assert back == m
+    assert back.signature == m.signature
+    with pytest.raises(ValueError, match="duplicate"):
+        Manifest(version=3, refs=(refs[0], refs[0]))
+
+
+# ---------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------
+
+def test_registry_register_cas_dedup(plane):
+    import os
+    reg, db = plane["reg"], plane["db"]
+    _outer_phase(plane, 0)
+    rows = _latest_module_rows(db)
+    assert set(rows) == set(reg.module_ids)
+    m1 = reg.register(rows, note="phase 0")
+    assert m1.version == 1
+    # every ref resolved to a content-addressed copy inside the registry
+    for ref in m1.refs:
+        assert ref.file is not None and ref.file.startswith(reg.root)
+        assert os.path.exists(ref.file)
+    # registering the identical composition again mints no new version
+    assert reg.register(rows).version == 1
+    # base refs (no rows) describe the template
+    m_base = reg.register(note="base")
+    assert m_base.version == 2
+    assert all(r.file is None for r in m_base.refs)
+    assert m_base.signature != m1.signature
+
+
+def test_registry_promote_rollback_bit_exact(plane):
+    reg, db = plane["reg"], plane["db"]
+    m_base = reg.register()
+    reg.promote(m_base.version)
+    base_paths = reg.serving_paths()
+    _outer_phase(plane, 0)
+    m1 = reg.register(_latest_module_rows(db))
+    reg.promote(m1.version)
+    v1_paths = reg.serving_paths()
+    _outer_phase(plane, 1, scale=-0.005)
+    m2 = reg.register(_latest_module_rows(db))
+    reg.promote(m2.version)
+    assert reg.serving_version == m2.version
+    # updated modules actually differ between versions
+    assert any(
+        not np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree_util.tree_leaves(v1_paths[0]),
+                        jax.tree_util.tree_leaves(reg.serving_paths()[0])))
+    # rollback walks the promotion history, bit-exactly
+    assert reg.rollback() == m1.version
+    _assert_paths_equal(reg.serving_paths(), v1_paths)
+    assert reg.rollback() == m_base.version
+    _assert_paths_equal(reg.serving_paths(), base_paths)
+    with pytest.raises(RuntimeError, match="roll back"):
+        reg.rollback()
+    with pytest.raises(KeyError):
+        reg.promote(99)
+
+
+def test_registry_reopen_across_process(plane):
+    """A fresh registry object on the same root (a new process) sees the
+    manifests + serving pointer and materializes bit-identically — even
+    after the checkpoint DB GC'd the original row files (the registry
+    copied them into its content-addressed store)."""
+    import os
+    reg, db = plane["reg"], plane["db"]
+    reg.register()
+    _outer_phase(plane, 0)
+    m1 = reg.register(_latest_module_rows(db))
+    reg.promote(1)
+    reg.promote(m1.version)
+    v1_paths = reg.serving_paths()
+    # simulate DB GC of the source rows
+    for r in db.rows(kind="module"):
+        os.remove(r.file)
+    reg2 = DeploymentRegistry(plane["cfg"], plane["dcfg"], reg.root,
+                              key=jax.random.PRNGKey(0),
+                              base_params=plane["base"])
+    assert reg2.versions == reg.versions
+    assert reg2.serving_version == m1.version
+    _assert_paths_equal(reg2.serving_paths(), v1_paths)
+    reg2.rollback()
+    assert reg2.serving_version == 1
+
+
+# ---------------------------------------------------------------------
+# publisher
+# ---------------------------------------------------------------------
+
+def test_cross_process_pointer_refresh(plane):
+    """A registry opened by another process observes promotes/rollbacks
+    made after it opened: the SERVING pointer is re-stat'ed on every
+    serving_version read, and manifests minted since are discovered."""
+    cfg, reg, db = plane["cfg"], plane["reg"], plane["db"]
+    m1 = reg.register()
+    reg.promote(m1.version)
+    # "serve process": opened before v2 even exists
+    reader = DeploymentRegistry(cfg, plane["dcfg"], reg.root,
+                                key=jax.random.PRNGKey(0),
+                                base_params=plane["base"])
+    eng = ContinuousBatchingEngine(cfg, registry=reader, cache_len=48,
+                                   slots_per_path=2)
+    assert eng.version == m1.version
+    # "publisher process": cut + promote a new version
+    _outer_phase(plane, 0)
+    m2 = reg.register(_latest_module_rows(db))
+    reg.promote(m2.version)
+    fins = eng.serve_trace([Request(rid=0, prompt=_prompt(cfg, seed=71),
+                                    max_new=4)])
+    assert eng.version == m2.version and fins[0].version == m2.version
+    _assert_paths_equal(eng.paths, reg.materialize(m2.version))
+    reg.rollback()
+    assert reader.serving_version == m1.version
+
+
+def test_publisher_restart_does_not_rechurn(plane):
+    """Restart (fresh registry + publisher + bootstrap on the same
+    roots) mints no new versions and re-publishes nothing — register()
+    dedupes against every known manifest, and the resumed publisher's
+    cut bookkeeping comes from the latest manifest."""
+    reg, db = plane["reg"], plane["db"]
+    pub = Publisher(db, reg)
+    pub.bootstrap()
+    _outer_phase(plane, 0)
+    assert pub.publish_cycle()["promoted"] == 2
+    pub.close()
+    for _ in range(2):                       # two restarts in a row
+        reg2 = DeploymentRegistry(plane["cfg"], plane["dcfg"], reg.root,
+                                  key=jax.random.PRNGKey(0),
+                                  base_params=plane["base"])
+        pub2 = Publisher(db, reg2)
+        assert pub2.bootstrap().version == 1     # dedupe, no churn
+        assert reg2.versions == [1, 2]
+        assert reg2.serving_version == 2
+        out = pub2.publish_cycle()               # nothing new to do
+        assert out["cut"] is None and out["promoted"] is None
+        pub2.close()
+
+
+def test_publisher_cuts_per_completed_outer_phase(plane):
+    reg, db, execs, base = (plane["reg"], plane["db"], plane["execs"],
+                            plane["base"])
+    pub = Publisher(db, reg)
+    assert pub.poll() is None                  # no rows yet
+    pub.bootstrap()
+    assert reg.serving_version == 1
+    # partial phase: module (0,0) applies (workers 0+1) but the shared
+    # executor still waits for workers 2,3 -> phase 0 incomplete
+    execs.accumulate(0, _delta(base, 0.01), phase=0)
+    execs.accumulate(1, _delta(base, 0.02), phase=0)
+    assert pub.completed_phase() == -1
+    assert pub.poll() is None
+    execs.accumulate(2, _delta(base, 0.03), phase=0)
+    execs.accumulate(3, _delta(base, 0.04), phase=0)
+    assert pub.completed_phase() == 0
+    m = pub.poll()
+    assert m is not None and m.version == 2
+    assert pub.poll() is None                  # same phase: no re-cut
+    _outer_phase(plane, 1, scale=-0.005)
+    assert pub.poll().version == 3             # next completed phase
+    pub.close()
+
+
+def test_publisher_promotes_and_listener_wakes(plane):
+    reg, db = plane["reg"], plane["db"]
+    pub = Publisher(db, reg)
+    pub.bootstrap()
+    assert not pub._event.is_set()
+    _outer_phase(plane, 0)                     # module rows fire listener
+    assert pub._event.is_set()
+    out = pub.publish_cycle()
+    assert out["promoted"] == 2 and reg.serving_version == 2
+    assert pub.published == 1
+    pub.close()
+    # after close the listener is detached
+    _outer_phase(plane, 1)
+    pub._event.clear()
+    plane["db"].write({"a": jnp.ones(2)}, path_id=-1, phase=9, step=9,
+                      kind="module", level=0, expert=0)
+    assert not pub._event.is_set()
+
+
+def test_publisher_thread_survives_cycle_errors(plane):
+    """A failing cycle (gate error, disk trouble) must not kill the
+    background publisher — engines would silently serve stale weights
+    forever."""
+    reg, db = plane["reg"], plane["db"]
+
+    class BrokenGate:
+        def evaluate(self, cand, serv):
+            raise RuntimeError("scoring blew up")
+
+    pub = Publisher(db, reg, gate=BrokenGate())
+    pub.bootstrap()
+    pub.start(period=0.02)
+    _outer_phase(plane, 0)
+    deadline = time.time() + 10.0
+    while pub.cycle_errors == 0 and time.time() < deadline:
+        time.sleep(0.02)
+    assert pub.cycle_errors >= 1
+    assert isinstance(pub.last_error, RuntimeError)
+    assert pub._thread.is_alive()          # still publishing
+    # a later, healthy cycle on the same thread still promotes
+    pub.gate = None
+    pub._last_cut_phase = -1               # let it re-cut the phase
+    pub._event.set()
+    while reg.serving_version == 1 and time.time() < deadline:
+        time.sleep(0.02)
+    assert reg.serving_version == 2
+    pub.close()
+
+
+def test_registry_caches_stay_bounded(plane):
+    """Every published phase mints fresh digests; both the assembled
+    cache and the payload cache must shrink to the retained versions."""
+    reg, db = plane["reg"], plane["db"]
+    reg.promote(reg.register().version)
+    for ph in range(5):
+        _outer_phase(plane, ph, scale=1e-3 * (ph + 1))
+        m = reg.register(_latest_module_rows(db))
+        reg.promote(m.version)
+        reg.serving_paths()
+    assert len(reg._assembled) <= reg.max_cached_versions
+    live = set(reg._base_digest.values())
+    for m in reg._manifests.values():
+        if m.signature in reg._assembled:
+            live.update(r.digest for r in m.refs)
+    assert set(reg._payload_cache) <= live
+    # an evicted version still materializes (reloaded from the CAS)
+    _assert_paths_equal(reg.materialize(2), reg.materialize(2))
+
+
+def test_canary_gate_blocks_regression_and_quarantines(plane):
+    reg, db, execs = plane["reg"], plane["db"], plane["execs"]
+    cfg = plane["cfg"]
+    shadow = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(7), (6, 24), 0, cfg.vocab_size), np.int32)
+    gate = CanaryGate(cfg, shadow, ppl_ratio_tol=1.5, min_agreement=0.0)
+    pub = Publisher(db, reg, gate=gate)
+    pub.bootstrap()
+    _outer_phase(plane, 0, scale=1e-4)         # small, healthy update
+    out = pub.publish_cycle()
+    assert out["promoted"] == 2 and out["report"].passed
+    assert out["report"].agreement > 0.5       # tiny delta: mostly same
+    # poisoned phase 1: every module row carries huge-noise params
+    rng = np.random.default_rng(0)
+    for (level, expert), ex in execs._all().items():
+        params = ex._params()
+        noise = jax.tree_util.tree_map(
+            lambda x: jnp.asarray(
+                rng.normal(scale=10.0, size=x.shape), x.dtype), params)
+        db.write({"params": noise, "momentum": nesterov_init(
+            _tree32(params))}, path_id=-1, phase=1, step=2,
+            kind="module", level=level, expert=expert,
+            extra={"updates": 2})
+    out = pub.publish_cycle()
+    assert out["rejected"] == 3 and out["promoted"] is None
+    assert not out["report"].passed
+    assert "regression" in out["report"].reason or \
+        "finite" in out["report"].reason
+    assert reg.serving_version == 2            # serving untouched
+    # quarantined: the same composition is never re-promoted
+    out = pub.publish_cycle()
+    assert out["promoted"] is None
+    pub.close()
+
+
+def test_auto_rollback_on_bake_regression(plane):
+    reg, db = plane["reg"], plane["db"]
+
+    class FailBake:
+        def evaluate(self, cand, serv):
+            return CanaryReport(9.9, 1.0, 0.0, False, "bake regression")
+
+    pub = Publisher(db, reg, bake_gate=FailBake())
+    pub.bootstrap()
+    base_paths = reg.serving_paths()
+    _outer_phase(plane, 0)
+    out = pub.publish_cycle()
+    # promoted, failed the bake, rolled back automatically
+    assert out["cut"] == 2 and out["rolled_back"] == 2
+    assert out["promoted"] is None
+    assert pub.rollbacks == 1
+    assert reg.serving_version == 1
+    _assert_paths_equal(reg.serving_paths(), base_paths)
+    pub.close()
+
+
+# ---------------------------------------------------------------------
+# engine hot-swap
+# ---------------------------------------------------------------------
+
+def _two_version_registry(plane):
+    """v1 = base (serving), v2 = after one outer phase (registered)."""
+    reg, db = plane["reg"], plane["db"]
+    m1 = reg.register()
+    reg.promote(m1.version)
+    _outer_phase(plane, 0)
+    m2 = reg.register(_latest_module_rows(db))
+    return m1, m2
+
+
+def test_engine_hot_swap_drain(plane):
+    """Drain policy: in-flight requests finish on their admitted
+    version (admissions pause), then the swap installs; post-swap
+    requests are token-identical to a fresh engine on the new params."""
+    cfg, reg = plane["cfg"], plane["reg"]
+    m1, m2 = _two_version_registry(plane)
+    eng = ContinuousBatchingEngine(cfg, registry=reg, cache_len=48,
+                                   slots_per_path=2, swap_policy="drain")
+    assert eng.version == m1.version
+    pa = _prompt(cfg, seed=21)
+    eng.submit(Request(rid=0, prompt=pa, max_new=8))
+    fins = eng.step()                      # admit + prefill A
+    reg.promote(m2.version)                # serving moves mid-flight
+    pb = _prompt(cfg, seed=22)
+    eng.submit(Request(rid=1, prompt=pb, max_new=8))
+    while not fins:
+        fins = eng.step()
+        if eng.in_flight:
+            # draining: A still decodes on v1, B is NOT admitted
+            assert eng.version == m1.version
+            assert 1 not in eng.in_flight
+    assert fins[0].rid == 0
+    assert fins[0].version == m1.version
+    assert not fins[0].swapped_midstream
+    # A drained -> the next tick installs v2 and admits B
+    fins_b = []
+    while not fins_b:
+        fins_b = eng.step()
+    assert eng.version == m2.version and eng.swaps == 1
+    assert fins_b[0].version == m2.version
+    # token-identity with a freshly constructed engine on v2
+    fresh = ContinuousBatchingEngine(cfg, registry=reg, cache_len=48,
+                                     slots_per_path=2)
+    ref = fresh.serve_trace([Request(rid=1, prompt=pb, max_new=8)])
+    np.testing.assert_array_equal(fins_b[0].tokens, ref[0].tokens)
+    # A's tokens match a fresh engine pinned to v1 (it finished there)
+    reg.rollback()
+    fresh1 = ContinuousBatchingEngine(cfg, registry=reg, cache_len=48,
+                                      slots_per_path=2)
+    ref1 = fresh1.serve_trace([Request(rid=0, prompt=pa, max_new=8)])
+    np.testing.assert_array_equal(fins[0].tokens, ref1[0].tokens)
+
+
+def test_engine_hot_swap_live_flags_divergence(plane):
+    """Live policy: the swap installs immediately, in-flight requests
+    are migrated mid-stream (re-prefilled on the new version) and
+    flagged; admissions never pause."""
+    cfg, reg = plane["cfg"], plane["reg"]
+    m1, m2 = _two_version_registry(plane)
+    eng = ContinuousBatchingEngine(cfg, registry=reg, cache_len=48,
+                                   slots_per_path=2, swap_policy="live")
+    pa = _prompt(cfg, seed=31)
+    eng.submit(Request(rid=0, prompt=pa, max_new=8))
+    eng.step()
+    eng.step()
+    reg.promote(m2.version)
+    pb = _prompt(cfg, seed=32)
+    eng.submit(Request(rid=1, prompt=pb, max_new=8))
+    fins = eng.step()                      # installs v2 + admits B
+    assert eng.version == m2.version and not fins
+    assert 1 in eng.in_flight              # no admission pause
+    out = {}
+    while len(out) < 2:
+        for f in eng.step():
+            out[f.rid] = f
+    assert out[0].swapped_midstream and out[0].version == m2.version
+    assert not out[1].swapped_midstream and out[1].version == m2.version
+    # the mid-stream request really diverged from an uninterrupted v1 run
+    reg.rollback()
+    fresh1 = ContinuousBatchingEngine(cfg, registry=reg, cache_len=48,
+                                      slots_per_path=2)
+    ref1 = fresh1.serve_trace([Request(rid=0, prompt=pa, max_new=8)])
+    assert not np.array_equal(out[0].tokens, ref1[0].tokens)
+
+
+def test_oneshot_engine_polls_registry(plane):
+    cfg, reg = plane["cfg"], plane["reg"]
+    m1, m2 = _two_version_registry(plane)
+    eng = PathServingEngine(cfg, registry=reg, cache_len=48)
+    prompts = _prompt(cfg, seed=41)[None]
+    r1 = eng.generate(prompts, max_new=6)
+    assert eng.version == m1.version
+    reg.promote(m2.version)
+    r2 = eng.generate(prompts, max_new=6)
+    assert eng.version == m2.version
+    fresh = PathServingEngine(cfg, registry=reg, cache_len=48)
+    ref = fresh.generate(prompts, max_new=6)
+    np.testing.assert_array_equal(r2.tokens, ref.tokens)
+    assert not np.array_equal(r1.tokens, r2.tokens)
+
+
+def test_engine_rejects_both_paths_and_registry(plane, tiny_base):
+    cfg, reg = plane["cfg"], plane["reg"]
+    with pytest.raises(ValueError, match="not both"):
+        ContinuousBatchingEngine(cfg, [tiny_base[0]], registry=reg)
+    with pytest.raises(ValueError, match="swap_policy"):
+        ContinuousBatchingEngine(cfg, [tiny_base[0]], swap_policy="x")
+    with pytest.raises(ValueError, match="required"):
+        ContinuousBatchingEngine(cfg)
+    with pytest.raises(RuntimeError, match="promote"):
+        ContinuousBatchingEngine(cfg, registry=reg)  # nothing promoted
+
+
+def test_ttft_recorded(tiny_cfg, tiny_base):
+    eng = ContinuousBatchingEngine(tiny_cfg, [tiny_base[0]], cache_len=48,
+                                   slots_per_path=2)
+    trace = [Request(rid=i, prompt=_prompt(tiny_cfg, seed=50 + i),
+                     max_new=6, arrival=0.01 * i) for i in range(4)]
+    fins = eng.serve_trace(trace, tick_dt=1e-3)
+    assert len(fins) == 4
+    for f in fins:
+        assert f.arrival <= f.first_token_at <= f.finished_at
+        assert 0.0 <= f.ttft <= f.latency
+        # 6 generated tokens: first token strictly precedes the last
+        assert f.first_token_at < f.finished_at
+
+
+# ---------------------------------------------------------------------
+# acceptance: train + serve concurrently, canary cycle, rollback
+# ---------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_train_and_serve_acceptance(tiny_cfg, tiny_docs, tiny_base,
+                                    tmp_path):
+    """TrainingService and ContinuousBatchingEngine run concurrently;
+    after an outer update the engine serves the new version within one
+    canary cycle, drain-policy outputs are token-identical to a fresh
+    engine on the new params, and rollback restores the prior version
+    bit-exactly."""
+    from repro.data import shard_documents
+    from repro.infra import TrainingService
+    cfg = tiny_cfg
+    base, _ = tiny_base
+    docs, doms = tiny_docs
+    ds = shard_documents(docs, doms % 4, 4)
+    key = jax.random.PRNGKey(0)
+    dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=2)
+    svc = TrainingService(cfg, dcfg, ds, key=key, base_params=base,
+                          ckpt_root=str(tmp_path / "db"), batch_size=4,
+                          peak_lr=1e-3, warmup=10, total_steps=100,
+                          num_workers=1)
+    reg = DeploymentRegistry(cfg, dcfg, str(tmp_path / "deploy"),
+                             key=key, base_params=base)
+    shadow = np.asarray(docs[:6, :24], np.int32)
+    gate = CanaryGate(cfg, shadow, ppl_ratio_tol=2.0, min_agreement=0.0)
+    pub = Publisher(svc.db, reg, gate=gate)
+    pub.bootstrap()
+    eng = ContinuousBatchingEngine(cfg, registry=reg, cache_len=48,
+                                   slots_per_path=2, swap_policy="drain")
+    v1 = eng.version
+    prompt = _prompt(cfg, seed=61)
+
+    # serve while the service trains in the background
+    trainer = threading.Thread(target=lambda: svc.run(1, tau=2))
+    trainer.start()
+    fins = eng.serve_trace([Request(rid=0, prompt=prompt, max_new=6)])
+    assert fins[0].version == v1
+    trainer.join()
+    # one canary cycle makes the outer update servable
+    out = pub.publish_cycle()
+    assert out["promoted"] is not None and out["report"].passed
+    fins2 = eng.serve_trace([Request(rid=1, prompt=prompt, max_new=6)])
+    assert eng.version == out["promoted"] and eng.swaps == 1
+    assert fins2[0].version == out["promoted"]
+    fresh = ContinuousBatchingEngine(cfg, registry=reg, cache_len=48,
+                                     slots_per_path=2)
+    ref = fresh.serve_trace([Request(rid=1, prompt=prompt, max_new=6)])
+    np.testing.assert_array_equal(fins2[0].tokens, ref[0].tokens)
+    # rollback restores the prior version bit-exactly
+    v1_paths = reg.materialize(v1)
+    reg.rollback()
+    fins3 = eng.serve_trace([Request(rid=2, prompt=prompt, max_new=6)])
+    assert eng.version == v1 and fins3[0].version == v1
+    _assert_paths_equal(eng.paths, v1_paths)
+    np.testing.assert_array_equal(fins3[0].tokens, fins[0].tokens)
+    pub.close()
+    svc.shutdown()

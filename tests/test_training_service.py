@@ -241,6 +241,61 @@ def test_ckpt_db_gc_pins_module_rows_with_live_train_rows(tmp_path):
     assert [r.phase for r in db.rows(kind="module")] == [2, 3, 9]
 
 
+def test_ckpt_db_gc_unpins_at_train_eviction_boundary(tmp_path):
+    """The pin on a module row lasts exactly as long as the train rows
+    it consumed: the write that GC's a consumed train row makes the
+    module row evictable on the *next* module write (and its npz file
+    is deleted with it), while rows whose train rows survive stay
+    pinned past the budget."""
+    import os
+    db = CheckpointDB(str(tmp_path), max_rows_per_path=2)
+    db.write({"a": jnp.ones(2)}, path_id=0, phase=0, step=0, kind="train")
+    db.write({"a": jnp.ones(2)}, path_id=0, phase=1, step=1, kind="train")
+    files = {}
+    for ph in range(3):      # module rows consuming train phases 0,1,1
+        files[ph] = db.write(
+            {"a": jnp.ones(2)}, path_id=-1, phase=ph, step=ph + 1,
+            kind="module", level=0, expert=0,
+            extra={"consumed": [[0, min(ph, 1)]]}).file
+    # all three module rows pinned by live train rows: budget exceeded
+    assert [r.phase for r in db.rows(kind="module")] == [0, 1, 2]
+    # train phase 2 evicts train phase 0 -> module row 0 loses its pin
+    db.write({"a": jnp.ones(2)}, path_id=0, phase=2, step=2, kind="train")
+    assert [r.phase for r in db.rows(kind="train")] == [1, 2]
+    assert os.path.exists(files[0])    # unpinned but not yet collected
+    db.write({"a": jnp.ones(2)}, path_id=-1, phase=3, step=4,
+             kind="module", level=0, expert=0,
+             extra={"consumed": [[0, 2]]})
+    # boundary: exactly the unpinned row went; pinned ones survive the
+    # budget, and the dropped row's file is gone
+    assert [r.phase for r in db.rows(kind="module")] == [1, 2, 3]
+    assert not os.path.exists(files[0])
+    assert os.path.exists(files[1]) and os.path.exists(files[2])
+
+
+def test_ckpt_db_gc_pinning_survives_restart(tmp_path):
+    """Pins are derived from the persisted ``consumed`` keys: a DB
+    reloaded from rows.jsonl (process restart) enforces the same
+    pin/evict decisions as the original instance."""
+    db = CheckpointDB(str(tmp_path), max_rows_per_path=2)
+    db.write({"a": jnp.ones(2)}, path_id=0, phase=0, step=0, kind="train")
+    db.write({"a": jnp.ones(2)}, path_id=0, phase=1, step=1, kind="train")
+    for ph in range(3):
+        db.write({"a": jnp.ones(2)}, path_id=-1, phase=ph, step=ph + 1,
+                 kind="module", level=0, expert=0,
+                 extra={"consumed": [[0, min(ph, 1)]]})
+    db2 = CheckpointDB(str(tmp_path), max_rows_per_path=2)   # restart
+    assert [r.phase for r in db2.rows(kind="module")] == [0, 1, 2]
+    assert [tuple(map(tuple, r.extra["consumed"]))
+            for r in db2.rows(kind="module")] == \
+        [((0, 0),), ((0, 1),), ((0, 1),)]
+    db2.write({"a": jnp.ones(2)}, path_id=0, phase=2, step=2, kind="train")
+    db2.write({"a": jnp.ones(2)}, path_id=-1, phase=3, step=4,
+              kind="module", level=0, expert=0,
+              extra={"consumed": [[0, 2]]})
+    assert [r.phase for r in db2.rows(kind="module")] == [1, 2, 3]
+
+
 def test_multi_contribution_window_matches_oracle(store4):
     """A straggler worker landing two phases in one window: the apply
     must rescale by the contribution count, exactly matching
