@@ -5,6 +5,11 @@ the same miniature training run through the global-barrier round
 trainer and through the phase-pipelined ``TrainingService``
 (``max_phase_lag=1``) with one deliberately slow shard.  The barrier
 pays the straggler every phase; the pipelined service overlaps it.
+
+Streaming fragment-wise outer sync (Streaming DiLoCo): the same run
+with the classic one-burst fp32 outer sync vs 4 staggered fragments +
+int8 outer gradients — simulated peak bytes per sync instant must drop
+>= 4x with < 1% phase-loss regression (both gated under ``--smoke``).
 Results are recorded to ``BENCH_train.json``.
 """
 from __future__ import annotations
@@ -129,10 +134,81 @@ def _async_vs_barrier_rows(s, quick: bool):
     ]
 
 
+def _streaming_rows(s, quick: bool):
+    """Classic one-burst fp32 outer sync vs streaming fragment-wise
+    sync with quantized outer gradients, same run otherwise.  Single
+    pool worker keeps the accumulation order (and hence the loss)
+    deterministic; the comparison is bandwidth shape + quality, the
+    wall-clock overlap is covered by the async-vs-barrier rows."""
+    from repro.data import shard_documents
+    from repro.infra.service import TrainingService
+
+    cfg, key = s["cfg"], s["key"]
+    W = 4
+    docs, doms = s["docs"][:256], np.asarray(s["doms"][:256])
+    ds = shard_documents(docs, doms % W, W)
+    phases = 3 if quick else 6
+    variants = {
+        "burst_fp32": {},
+        "stream_frag4_int8": dict(outer_fragments=4, fragment_stagger=1,
+                                  comm_dtype="int8"),
+    }
+    runs = {}
+    for name, over in variants.items():
+        dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=2, **over)
+        with tempfile.TemporaryDirectory() as root:
+            svc = TrainingService(
+                cfg, dcfg, ds, key=key, ckpt_root=root,
+                base_params=s["base"], batch_size=4, peak_lr=1e-3,
+                warmup=10, total_steps=200, num_workers=1)
+            svc.run(1, tau=2)             # warm the jit out of the timing
+            # the warmup phase must not pollute the recorded comms
+            # (peak is schedule-determined, but sends/totals are counts)
+            svc.comm_stats.update(peak_sync_bytes=0, total_comm_bytes=0,
+                                  sends=0)
+            t0 = time.time()
+            m = svc.run(phases, tau=2)
+            dt = time.time() - t0
+            runs[name] = (m, dict(svc.comm_stats), dt)
+            svc.shutdown()
+    mb, cb, dtb = runs["burst_fp32"]
+    ms, cs, dts = runs["stream_frag4_int8"]
+    peak_reduction = cb["peak_sync_bytes"] / max(cs["peak_sync_bytes"], 1)
+    loss_ratio = ms["mean_loss"] / mb["mean_loss"]
+    # the headline claims, gated in --smoke (run.py turns an exception
+    # into a non-zero exit): streaming must cut the sync-instant
+    # bandwidth burst >= 4x without hurting the phase loss > 1%
+    assert peak_reduction >= 4.0, (
+        f"peak comms reduction {peak_reduction:.2f}x < 4x "
+        f"({cb['peak_sync_bytes']} -> {cs['peak_sync_bytes']} bytes)")
+    assert loss_ratio <= 1.01, (
+        f"streaming phase-loss regression {100 * (loss_ratio - 1):.2f}% "
+        f"> 1% ({mb['mean_loss']:.4f} -> {ms['mean_loss']:.4f})")
+    return [
+        {"name": "outer_sync_burst_fp32",
+         "us_per_call": dtb / phases * 1e6,
+         "wall_s_per_phase": dtb / phases, "phases": phases,
+         "peak_sync_bytes": cb["peak_sync_bytes"],
+         "total_comm_bytes": cb["total_comm_bytes"],
+         "sends": cb["sends"], "mean_loss": mb["mean_loss"]},
+        {"name": "outer_sync_stream_frag4_int8",
+         "us_per_call": dts / phases * 1e6,
+         "wall_s_per_phase": dts / phases, "phases": phases,
+         "peak_sync_bytes": cs["peak_sync_bytes"],
+         "total_comm_bytes": cs["total_comm_bytes"],
+         "sends": cs["sends"], "mean_loss": ms["mean_loss"],
+         "peak_comms_reduction": peak_reduction,
+         "total_comms_reduction":
+             cb["total_comm_bytes"] / max(cs["total_comm_bytes"], 1),
+         "loss_ratio_vs_burst": loss_ratio},
+    ]
+
+
 def run(quick: bool = True):
     s = common.setup(quick)
     rows = _executor_rows(s)
     rows += _async_vs_barrier_rows(s, quick)
+    rows += _streaming_rows(s, quick)
     common.record_bench("outer_exec_async", rows,
                         path=common.BENCH_TRAIN_PATH)
     return rows

@@ -68,6 +68,87 @@ def outer_state_init(global_params):
     return nesterov_init(global_params)
 
 
+# ---------------------------------------------------------------------
+# streaming fragment-wise outer sync (Streaming DiLoCo)
+# ---------------------------------------------------------------------
+
+def fragment_state_init(global_params, spec):
+    """Per-fragment Nesterov states: ``states[f]`` maps leaf index ->
+    fp32 momentum buffer for the leaves of fragment ``f``."""
+    leaves = spec.flatten(global_params)
+    return [{i: jnp.zeros(jnp.shape(leaves[i]), jnp.float32)
+             for i in spec.indices[f]}
+            for f in range(spec.num_fragments)]
+
+
+def streaming_outer_step(worker_params, global_params, frag_states, axes,
+                         mix_layers, mix_shared, spec, *,
+                         sync_fragments=None, comm_dtype="fp32",
+                         lr=0.7, momentum=0.9, nesterov=True):
+    """Per-fragment ``outer_step``: only the leaves of the fragments in
+    ``sync_fragments`` are synchronized this call; every synced
+    fragment advances its own Nesterov state, unsynced fragments (and
+    their worker copies) are left untouched.
+
+    ``comm_dtype`` != fp32 quantize-dequantizes each worker's delta
+    before mixing (the wire payload; error feedback lives with the
+    caller, see ``core.fragments.quantize_with_feedback``).
+
+    With ``spec.num_fragments == 1``, ``sync_fragments=None`` and
+    ``comm_dtype="fp32"`` this is bit-identical to :func:`outer_step`
+    — the per-leaf operation sequence is exactly the same
+    (regression-tested in tests/test_fragments.py).
+    """
+    from repro.core.fragments import fake_quantize
+
+    sync = (range(spec.num_fragments) if sync_fragments is None
+            else sorted(set(int(f) for f in sync_fragments)))
+    deltas = jax.tree_util.tree_map(
+        lambda g, w: g.astype(jnp.float32) - w.astype(jnp.float32),
+        global_params, worker_params)
+    deltas = fake_quantize(deltas, comm_dtype)
+    og = mix_deltas(deltas, axes, mix_layers, mix_shared)
+
+    og_leaves = spec.flatten(og)
+    g_leaves = list(spec.flatten(global_params))
+    new_states = [dict(s) for s in frag_states]
+    for f in sync:
+        for i in spec.indices[f]:
+            upd, st = nesterov_update(
+                {"x": og_leaves[i]},
+                {"momentum": {"x": new_states[f][i]}},
+                {"x": g_leaves[i]}, lr=lr, momentum=momentum,
+                nesterov=nesterov)
+            g_leaves[i] = upd["x"]
+            new_states[f][i] = st["momentum"]["x"]
+    new_global = spec.unflatten(g_leaves)
+    # redistribute only the synced fragments: unsynced leaves keep the
+    # workers' own (inner-trained) values — resetting them to the stale
+    # global would throw away inner progress the fragment has not
+    # shipped yet
+    synced = {i for f in sync for i in spec.indices[f]}
+    w_leaves = list(spec.flatten(worker_params))
+    for i in synced:
+        w_leaves[i] = g_leaves[i].astype(w_leaves[i].dtype)
+    new_worker = spec.unflatten(w_leaves)
+    return new_worker, new_global, new_states
+
+
+def fragment_window_outer_gradient(segs, weights, spec, fragment, *,
+                                   rescale=True):
+    """:func:`window_outer_gradient` restricted to one fragment:
+    ``{leaf_idx: outer_gradient}`` over the fragment's leaves — the
+    oracle the per-fragment executor windows are tested against."""
+    wsum = float(sum(weights))
+    scale = (math.sqrt(len(segs)) if rescale else 1.0) / max(wsum, 1e-12)
+    acc: dict = {}
+    for seg, w in zip(segs, weights):
+        for i, leaf in spec.slice_leaves(seg, fragment).items():
+            term = w * leaf.astype(jnp.float32)
+            acc[i] = term if i not in acc else acc[i] + term
+    return {i: a * scale for i, a in acc.items()}
+
+
 def window_outer_gradient(segs, weights, *, rescale=True):
     """Lag-aware executor-window equivalence oracle (§3.3 async).
 

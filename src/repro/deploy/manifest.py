@@ -76,6 +76,14 @@ class Manifest:
     parent: int = -1             # version this candidate was cut from
     created_at: float = field(default_factory=time.time)
     note: str = ""
+    # the completed outer phase this candidate was cut at.  With
+    # staggered fragments a ref's row phase can run *ahead* of the cut
+    # phase (the newest row per module is whichever fragment applied
+    # last), so publisher resume bookkeeping needs the cut phase
+    # recorded explicitly; -1 = pre-fragment manifest (falls back to
+    # min over ref phases).  Not part of the signature: the identity of
+    # a version is its composition, not when it was cut.
+    cut_phase: int = -1
 
     def __post_init__(self):
         ids = [r.module_id for r in self.refs]
@@ -96,6 +104,7 @@ class Manifest:
         return json.dumps({
             "version": self.version, "parent": self.parent,
             "created_at": self.created_at, "note": self.note,
+            "cut_phase": self.cut_phase,
             "refs": [asdict(r) for r in self.refs]}, indent=2)
 
     @classmethod
@@ -104,4 +113,5 @@ class Manifest:
         return cls(version=d["version"], parent=d.get("parent", -1),
                    created_at=d.get("created_at", 0.0),
                    note=d.get("note", ""),
+                   cut_phase=d.get("cut_phase", -1),
                    refs=tuple(ModuleRef(**r) for r in d["refs"]))

@@ -19,6 +19,8 @@ it in a daemon thread driven by the DB listener for live deployments
 """
 from __future__ import annotations
 
+import json
+import os
 import threading
 
 from .manifest import Manifest
@@ -37,17 +39,57 @@ class Publisher:
         self.rollbacks = 0
         self.cycle_errors = 0
         self.last_error: Exception | None = None
-        self._quarantined: set = set()    # signatures never to re-promote
+        # signatures never to re-promote — persisted in the registry
+        # root so a restarted publisher does not re-promote a version a
+        # previous process rejected or auto-rolled-back
+        self._quarantine_file = os.path.join(registry.root,
+                                             "QUARANTINE.json")
+        self._quarantined: set = self._load_quarantine()
         self._event = threading.Event()
         self._stop = threading.Event()
         self._thread = None
         self._cycle_lock = threading.Lock()
         # resume: don't re-cut a phase an earlier process already
-        # published (manifest refs record the phase of every module row)
+        # published.  Manifests record the completed phase they were
+        # cut at (cut_phase); with staggered fragments the ref row
+        # phases can run *ahead* of it (the newest row per module is
+        # whichever fragment applied last), so min-over-refs — the
+        # pre-fragment fallback — would overshoot and skip the next
+        # completed phase after a restart.
         latest = registry.latest_manifest()
-        self._last_cut_phase = (min(r.phase for r in latest.refs)
-                                if latest is not None else -1)
+        if latest is None:
+            self._last_cut_phase = -1
+        else:
+            cut = (latest.cut_phase if latest.cut_phase >= 0 else
+                   min((r.phase for r in latest.refs), default=-1))
+            # a cut that was never promoted (the process died between
+            # register and promote — the chaos window) must not be
+            # treated as published: back off one phase so the first
+            # cycle re-cuts it (register() dedupes to the same
+            # version) and the retry promotes instead of stranding
+            # the candidate forever.  Quarantined cuts (rejected or
+            # auto-rolled-back by a previous process; the quarantine
+            # is persisted) are handled, not stranded — no backoff.
+            handled = (latest.version == registry.serving_version
+                       or latest.version in registry.promotion_history
+                       or latest.signature in self._quarantined)
+            self._last_cut_phase = cut if handled else cut - 1
         db.add_listener(self._on_row)
+
+    # -- quarantine persistence ----------------------------------------
+    def _load_quarantine(self) -> set:
+        try:
+            with open(self._quarantine_file) as f:
+                return {tuple(sig) for sig in json.load(f)}
+        except (OSError, ValueError):
+            return set()
+
+    def _quarantine(self, signature) -> None:
+        self._quarantined.add(signature)
+        tmp = self._quarantine_file + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump([list(s) for s in sorted(self._quarantined)], f)
+        os.replace(tmp, self._quarantine_file)
 
     # -- event plumbing ------------------------------------------------
     def _on_row(self, row) -> None:
@@ -81,17 +123,38 @@ class Publisher:
     # -- candidate detection -------------------------------------------
     def _scan(self):
         """(completed phase, latest module row per id).  Rows are in
-        commit order, so the last row per module is its newest."""
+        commit order, so the last row per module is its newest.
+
+        With streaming fragment-wise sync a module's update for phase t
+        lands as one row per fragment window; a candidate is cut only
+        at *fragment-complete* versions — a module counts phase t done
+        once every one of its fragments (``num_fragments`` rides on
+        each row) has applied phase >= t, so a half-synced module can
+        never leak into a serving manifest."""
         latest: dict = {}
+        frag_phase: dict = {}
+        frag_expect: dict = {}
         for r in self.db.rows(kind="module"):
-            latest[(r.level, r.expert)] = r
-        completed = min((latest[mid].phase if mid in latest else -1
-                         for mid in self.registry.module_ids), default=-1)
+            mid = (r.level, r.expert)
+            latest[mid] = r
+            fid = r.fragment if r.fragment >= 0 else 0
+            ph = int(r.extra.get("frag_phase", r.phase))
+            cur = frag_phase.setdefault(mid, {})
+            cur[fid] = max(cur.get(fid, -1), ph)
+            frag_expect[mid] = int(r.extra.get("num_fragments", 1))
+        completed = -1
+        for mid in self.registry.module_ids:
+            frags = frag_phase.get(mid)
+            if frags is None or len(frags) < frag_expect.get(mid, 1):
+                return -1, latest          # a fragment never applied
+            mod_done = min(frags.values())
+            completed = mod_done if completed < 0 else min(completed,
+                                                           mod_done)
         return completed, latest
 
     def completed_phase(self) -> int:
-        """Highest outer phase applied by *every* module (-1 if any
-        module has no applied update yet)."""
+        """Highest outer phase applied by every fragment of *every*
+        module (-1 if any fragment has no applied update yet)."""
         return self._scan()[0]
 
     def poll(self) -> Manifest | None:
@@ -100,7 +163,8 @@ class Publisher:
         if completed <= self._last_cut_phase:
             return None
         m = self.registry.register(latest,
-                                   note=f"outer phase {completed} complete")
+                                   note=f"outer phase {completed} complete",
+                                   cut_phase=completed)
         self._last_cut_phase = completed
         return m
 
@@ -111,42 +175,55 @@ class Publisher:
         with self._cycle_lock:
             out = {"cut": None, "promoted": None, "rejected": None,
                    "rolled_back": None, "report": None}
+            prev_cut = self._last_cut_phase
             m = self.poll()
             if m is None:
                 return out
-            out["cut"] = m.version
-            if m.signature in self._quarantined:
-                out["rejected"] = m.version
-                self.rejected += 1
-                return out
-            prev = self.registry.serving_version
-            if prev is not None and prev == m.version:
-                return out
-            if self.gate is not None and prev is not None:
-                report = self.gate.evaluate(
-                    self.registry.materialize(m.version),
-                    self.registry.serving_paths())
-                out["report"] = report
-                if not report.passed:
-                    self._quarantined.add(m.signature)
-                    self.rejected += 1
-                    out["rejected"] = m.version
-                    return out
-            self.registry.promote(m.version)
-            self.published += 1
-            out["promoted"] = m.version
-            if self.bake_gate is not None and prev is not None:
-                bake = self.bake_gate.evaluate(
-                    self.registry.serving_paths(),
-                    self.registry.materialize(prev))
-                out["report"] = bake
-                if not bake.passed and self.auto_rollback:
-                    self._quarantined.add(m.signature)
-                    self.registry.rollback()
-                    self.rollbacks += 1
-                    out["rolled_back"] = m.version
-                    out["promoted"] = None
+            try:
+                return self._cycle_body(out, m)
+            except BaseException:
+                # crashed mid-cycle (gate error, promote died before the
+                # pointer replace): rewind the cut bookkeeping so the
+                # next cycle re-cuts this phase — register() dedupes to
+                # the same version, so the retry promotes instead of
+                # losing the candidate until the next phase completes
+                self._last_cut_phase = prev_cut
+                raise
+
+    def _cycle_body(self, out: dict, m: Manifest) -> dict:
+        out["cut"] = m.version
+        if m.signature in self._quarantined:
+            out["rejected"] = m.version
+            self.rejected += 1
             return out
+        prev = self.registry.serving_version
+        if prev is not None and prev == m.version:
+            return out
+        if self.gate is not None and prev is not None:
+            report = self.gate.evaluate(
+                self.registry.materialize(m.version),
+                self.registry.serving_paths())
+            out["report"] = report
+            if not report.passed:
+                self._quarantine(m.signature)
+                self.rejected += 1
+                out["rejected"] = m.version
+                return out
+        self.registry.promote(m.version)
+        self.published += 1
+        out["promoted"] = m.version
+        if self.bake_gate is not None and prev is not None:
+            bake = self.bake_gate.evaluate(
+                self.registry.serving_paths(),
+                self.registry.materialize(prev))
+            out["report"] = bake
+            if not bake.passed and self.auto_rollback:
+                self._quarantine(m.signature)
+                self.registry.rollback()
+                self.rollbacks += 1
+                out["rolled_back"] = m.version
+                out["promoted"] = None
+        return out
 
     # -- background mode -----------------------------------------------
     def start(self, period: float = 0.5) -> "Publisher":

@@ -98,7 +98,16 @@ class DeploymentRegistry:
         self._payload_cache: dict = {}       # digest -> module tree
         self._assembled: dict = {}           # signature -> [path params]
         self.max_cached_versions = max_cached_versions
+        # chaos/fault-injection hook (tests): called with a named
+        # point ("promote:pre_pointer", "pointer:pre_replace",
+        # "rollback:pre_pointer"); raising simulates a crash at that
+        # point.  None (production) is a no-op.
+        self.fault_injector = None
         self._load_state()
+
+    def _fault(self, point: str) -> None:
+        if self.fault_injector is not None:
+            self.fault_injector(point)
 
     # -- persistence ---------------------------------------------------
     def _manifest_path(self, version: int) -> str:
@@ -152,13 +161,14 @@ class DeploymentRegistry:
         with open(tmp, "w") as f:
             json.dump({"serving": self._serving,
                        "history": self._history}, f)
+        self._fault("pointer:pre_replace")   # crash window: tmp written
         os.replace(tmp, ptr)     # atomic: readers see old or new, never mixed
         st = os.stat(ptr)
         self._ptr_stat = (st.st_ino, st.st_mtime_ns, st.st_size)
 
     # -- registration --------------------------------------------------
     def register(self, rows: dict | None = None, *,
-                 note: str = "") -> Manifest:
+                 note: str = "", cut_phase: int = -1) -> Manifest:
         """Cut a manifest from checkpoint rows (``module-id -> CkptRow``).
 
         Module ids without a row keep their base-template payload.  Row
@@ -200,7 +210,7 @@ class DeploymentRegistry:
             m = Manifest(version=(latest.version + 1 if latest else 1),
                          refs=tuple(refs),
                          parent=self._serving if self._serving else -1,
-                         note=note)
+                         note=note, cut_phase=cut_phase)
             # dedupe against *every* known manifest, not just the
             # latest: a resumed deployment re-registering an already
             # published composition (bootstrap after restart, a re-cut
@@ -237,27 +247,49 @@ class DeploymentRegistry:
             self._refresh_locked()
             return self._serving
 
+    @property
+    def promotion_history(self) -> list:
+        """Versions on the rollback stack (previously serving)."""
+        with self._lock:
+            self._refresh_locked()
+            return list(self._history)
+
     def promote(self, version: int) -> None:
         """Atomically tag ``version`` as serving (previous goes on the
-        rollback history)."""
+        rollback history).  Exception-safe: if the pointer write dies
+        mid-promote (crash, disk error, injected fault) the in-memory
+        state is restored to match the on-disk pointer, so a surviving
+        process never serves a version the pointer does not record."""
         with self._lock:
             if version not in self._manifests:
                 raise KeyError(f"unknown version {version}; "
                                f"registered: {self.versions}")
             if version == self._serving:
                 return
+            prev_serving, prev_history = self._serving, list(self._history)
             if self._serving is not None:
                 self._history.append(self._serving)
             self._serving = version
-            self._write_pointer_locked()
+            try:
+                self._fault("promote:pre_pointer")
+                self._write_pointer_locked()
+            except BaseException:
+                self._serving, self._history = prev_serving, prev_history
+                raise
 
     def rollback(self) -> int:
         """Atomically restore the previously serving version."""
         with self._lock:
             if not self._history:
                 raise RuntimeError("no version to roll back to")
+            prev_serving, prev_history = self._serving, list(self._history)
             self._serving = self._history.pop()
-            self._write_pointer_locked()
+            try:
+                self._fault("rollback:pre_pointer")
+                self._write_pointer_locked()
+            except BaseException:
+                self._serving, self._history = prev_serving, prev_history
+                raise
             return self._serving
 
     def serving(self):

@@ -28,9 +28,10 @@ class CkptRow:
     phase: int
     step: int
     file: str
-    kind: str = "train"          # train | opt | snap | module
+    kind: str = "train"          # train | opt | snap | module | qres | flush
     level: int = -1              # kind="module": which executor wrote it
     expert: int = -1             # (-1, -1) = the shared-leaves executor
+    fragment: int = -1           # kind="module": which fragment window
     extra: dict = field(default_factory=dict)
     ts: float = field(default_factory=time.time)
 
@@ -103,20 +104,23 @@ class CheckpointDB:
 
     @staticmethod
     def _group(row: CkptRow):
-        return (row.kind, row.path_id, row.level, row.expert)
+        # per-fragment retention: each fragment window's rows get their
+        # own budget (a K-fragment module writes K× the rows)
+        return (row.kind, row.path_id, row.level, row.expert, row.fragment)
 
     def write(self, tree, *, path_id: int, phase: int, step: int,
               kind: str = "train", level: int = -1, expert: int = -1,
-              extra: dict | None = None) -> CkptRow:
+              fragment: int = -1, extra: dict | None = None) -> CkptRow:
+        frag = f"f{fragment}" if fragment >= 0 else ""
         if level >= 0:
-            name = f"{kind}_l{level}e{expert}_ph{phase:04d}_s{step}.npz"
+            name = f"{kind}_l{level}e{expert}{frag}_ph{phase:04d}_s{step}.npz"
         else:
-            name = f"{kind}_p{path_id:04d}_ph{phase:04d}_s{step}.npz"
+            name = f"{kind}_p{path_id:04d}{frag}_ph{phase:04d}_s{step}.npz"
         file = os.path.join(self.root, name)
         save_tree(file, tree)
         row = CkptRow(path_id=path_id, phase=phase, step=step, file=file,
                       kind=kind, level=level, expert=expert,
-                      extra=dict(extra or {}))
+                      fragment=fragment, extra=dict(extra or {}))
         with self._lock:
             self._rows.append(row)
             dropped = self._gc_locked(row) if self.max_rows_per_path else []

@@ -8,21 +8,35 @@ window's quorum of contributors has reported.  The full model therefore
 never lives in one place; each executor holds only its module's
 parameters and momentum (Sharded Outer Optimization Executor).
 
-Asynchronous phase pipelining (§3, Fig. 6): every executor keeps its own
-*window phase counter*.  Contributions arrive tagged with the reporting
-path's phase clock; arrivals ahead of the window are buffered until the
-window advances (``TrainingService.max_phase_lag`` bounds the depth),
-stragglers from an already-applied window fold into the current one
-(Decoupled/Streaming-DiLoCo semantics), and each module applies the
-moment *its* quorum lands — independently of every other module.
+Streaming fragment-wise sync (Streaming DiLoCo): each executor
+partitions its module's parameter leaves into ``fragments`` byte-
+balanced fragments (core/fragments.py).  Every fragment owns an
+independent accumulation window — its own partial sum, quorum
+bookkeeping, *window phase counter* and Nesterov momentum slice — and
+applies the moment its own quorum lands, so a module's sync is spread
+across the phase instead of bursting at the boundary.  ``fragments=1``
+degenerates to the classic whole-module window and is bit-identical to
+the pre-fragment executor (the per-leaf operation sequence is
+unchanged).
 
-With a CheckpointDB attached, each applied update persists a
-``kind="module"`` checkpoint (params + momentum + the contribution keys
-it consumed) — the recovery substrate ``TrainingService.resume`` uses.
+Asynchronous phase pipelining (§3, Fig. 6): contributions arrive tagged
+with the reporting path's phase clock; arrivals ahead of a fragment
+window are buffered until that window advances
+(``TrainingService.max_phase_lag`` bounds the depth), stragglers from
+an already-applied window fold into the current one
+(Decoupled/Streaming-DiLoCo semantics), and each fragment applies the
+moment *its* quorum lands — independently of every other fragment and
+module.
+
+With a CheckpointDB attached, each applied fragment update persists a
+``kind="module"`` checkpoint (full module params + momentum + the
+contribution keys the fragment consumed, tagged with the fragment id)
+— the recovery substrate ``TrainingService.resume`` uses.
 
 Produces updates bit-identical to the vectorized mixing formulation
 (core/diloco.py) — asserted in tests/test_infra.py; the quorum/lagged
-window matches ``core.diloco.window_outer_gradient``.
+window matches ``core.diloco.window_outer_gradient`` and its
+per-fragment variant ``fragment_window_outer_gradient``.
 """
 from __future__ import annotations
 
@@ -33,35 +47,39 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fragments import FragmentSpec
 from repro.core.module_store import ModuleStore
 from repro.core.partition import PathPartition, paths_through_module
-from repro.optim.nesterov import nesterov_init, nesterov_update
+from repro.optim.nesterov import nesterov_update
 from .ckpt_db import load_tree
 
 
-def _tree_add(acc, delta, scale):
-    return jax.tree_util.tree_map(
-        lambda a, d: a + scale * d.astype(jnp.float32)
-        if a is not None else None, acc, delta)
+class _FragWindow:
+    """One fragment's accumulation window + outer-optimizer state."""
 
+    __slots__ = ("fid", "indices", "phase", "updates", "mom", "acc",
+                 "seen", "wsum", "early", "consumed")
 
-def _tree_zeros(like):
-    return jax.tree_util.tree_map(
-        lambda x: None if x is None else jnp.zeros(x.shape, jnp.float32),
-        like)
-
-
-def _tree32(tree):
-    return jax.tree_util.tree_map(
-        lambda x: None if x is None else x.astype(jnp.float32), tree)
+    def __init__(self, fid: int, indices, mom: dict):
+        self.fid = fid
+        self.indices = list(indices)
+        self.phase = 0               # this fragment's window phase counter
+        self.updates = 0
+        self.mom = mom               # {leaf_idx: fp32 momentum buffer}
+        self.acc: dict = {}
+        self.seen: set = set()       # (worker, tag) folded into the window
+        self.wsum = 0.0
+        self.early: dict = {}        # tag -> [(worker, {idx: leaf}), ...]
+        self.consumed: set = set()   # keys restored from module ckpts
 
 
 class _ExecutorBase:
     """Window/quorum/phase machinery shared by the per-module and the
-    shared-leaves executors."""
+    shared-leaves executors, one window per parameter fragment."""
 
     def __init__(self, member_workers, alphas, *, lr, momentum, nesterov,
-                 rescale, quorum: float = 1.0, ckpt_db=None):
+                 rescale, quorum: float = 1.0, ckpt_db=None,
+                 fragments: int = 1):
         self.members = set(int(w) for w in member_workers)
         self.alphas = {int(w): float(alphas[int(w)]) for w in self.members}
         self.lr, self.momentum, self.nesterov = lr, momentum, nesterov
@@ -70,13 +88,52 @@ class _ExecutorBase:
         self.active = set(self.members)
         self.quorum = max(1, math.ceil(quorum * len(self.active)))
         self.db = ckpt_db
-        self.phase = 0               # window phase counter
-        self.updates = 0
-        self._early: dict = {}       # tag -> [(worker, seg), ...]
-        self._consumed: set = set()  # (worker, tag) restored from module ckpts
         self._lock = threading.Lock()
-        self.mom_state = nesterov_init(_tree32(self._params()))
+        params = self._params()
+        self.spec = FragmentSpec(params, fragments)
+        p_leaves = self.spec.flatten(params)
+        # leaf shapes never change: cache them so window resets don't
+        # re-flatten the module tree
+        self._leaf_shapes = [jnp.shape(x) for x in p_leaves]
+        self.windows = [
+            _FragWindow(f, self.spec.indices[f],
+                        {i: jnp.zeros(self._leaf_shapes[i], jnp.float32)
+                         for i in self.spec.indices[f]})
+            for f in range(self.spec.num_fragments)]
         self._reset()
+
+    # -- legacy single-window accessors (valid views for fragments=1,
+    # -- which every pre-streaming caller and test uses) ----------------
+    @property
+    def phase(self) -> int:
+        return min(w.phase for w in self.windows)
+
+    @property
+    def updates(self) -> int:
+        return sum(w.updates for w in self.windows)
+
+    @property
+    def seen(self) -> set:
+        return self.windows[0].seen
+
+    @property
+    def wsum(self) -> float:
+        return self.windows[0].wsum
+
+    @property
+    def _early(self) -> dict:
+        return self.windows[0].early
+
+    @property
+    def mom_state(self) -> dict:
+        return {"momentum": self._momentum_tree()}
+
+    def _momentum_tree(self):
+        leaves = [None] * self.spec.num_leaves
+        for w in self.windows:
+            for i in w.indices:
+                leaves[i] = w.mom[i]
+        return self.spec.unflatten(leaves)
 
     # -- subclass surface ----------------------------------------------
     def _params(self):
@@ -96,135 +153,195 @@ class _ExecutorBase:
         """Path sampling (paper §2.6.2): only a subset of paths trains
         this phase; the module updates from whichever of its
         contributors are active (none active -> module untouched).
-        ``phase`` aligns the window counter in barrier mode, where an
-        executor may sit out whole phases."""
+        ``phase`` aligns every fragment's window counter in barrier
+        mode, where an executor may sit out whole phases."""
         with self._lock:
             self.active = self.members & set(int(w) for w in active_workers)
             self.quorum = max(1, math.ceil(
                 self.quorum_frac * max(len(self.active), 1)))
             if phase is not None:
-                self.phase = int(phase)
-                self._early.clear()
+                for w in self.windows:
+                    w.phase = int(phase)
+                    w.early.clear()
             self._reset()
 
     def _reset(self):
-        self.acc = _tree_zeros(self._params())
-        self.seen: set = set()       # (worker, tag) folded into the window
-        self.wsum = 0.0
+        for w in self.windows:
+            self._reset_window(w)
+
+    def _reset_window(self, win: _FragWindow):
+        win.acc = {i: jnp.zeros(self._leaf_shapes[i], jnp.float32)
+                   for i in win.indices}
+        win.seen = set()
+        win.wsum = 0.0
 
     def accumulate(self, worker_id: int, delta_tree,
-                   phase: int | None = None) -> bool:
-        """Online accumulation; returns True if this reached quorum and
-        the outer update was applied.  quorum < 1.0 = async outer
-        updates: stragglers fold into the next accumulation window."""
+                   phase: int | None = None,
+                   fragment=None) -> bool:
+        """Online accumulation; returns True if any fragment window
+        reached quorum and applied its outer update.  quorum < 1.0 =
+        async outer updates: stragglers fold into the next accumulation
+        window.  ``fragment`` restricts the fold to one fragment id or
+        a sequence of ids (one send-slot of the staggered schedule,
+        folded with a single delta slice); None folds every fragment
+        of the contribution."""
         with self._lock:
             # membership must be decided under the lock: a concurrent
             # set_active could otherwise drop or double-count this
             # contribution mid-accumulation
             if worker_id not in self.active:
                 return False
-            tag = self.phase if phase is None else int(phase)
-            key = (worker_id, tag)
-            if (key in self.seen or key in self._consumed
-                    or any(w == worker_id
-                           for w, _ in self._early.get(tag, ()))):
-                return False   # duplicate (retried task / replay) — idempotent
-            seg = self._slice(delta_tree)
-            if tag > self.phase:
-                # the path raced ahead of this module's window: buffer
-                # until the window advances
-                self._early.setdefault(tag, []).append((worker_id, seg))
-                return False
-            applied = self._fold_locked(worker_id, tag, seg)
-            self._drain_locked()
+            if fragment is None:
+                windows = self.windows
+            else:
+                fids = ([fragment] if isinstance(fragment, int)
+                        else list(fragment))
+                # spec may clamp K below the requested fragment count:
+                # this module's leaves are fully covered by lower ids
+                windows = [self.windows[f] for f in fids
+                           if f < self.spec.num_fragments]
+                if not windows:
+                    return False
+            leaves = None      # sliced lazily: duplicates (resume
+            applied = False    # replay, retried tasks) stay O(1)
+            for win in windows:
+                tag = win.phase if phase is None else int(phase)
+                key = (worker_id, tag)
+                if (key in win.seen or key in win.consumed
+                        or any(w == worker_id
+                               for w, _ in win.early.get(tag, ()))):
+                    continue   # duplicate (retried task / replay)
+                if leaves is None:
+                    leaves = self.spec.flatten(self._slice(delta_tree))
+                part = {i: leaves[i] for i in win.indices}
+                if tag > win.phase:
+                    # the path raced ahead of this fragment's window:
+                    # buffer until the window advances
+                    win.early.setdefault(tag, []).append((worker_id, part))
+                    continue
+                applied |= self._fold_locked(win, worker_id, tag, part)
+                self._drain_locked(win)
             return applied
 
-    def _fold_locked(self, worker_id, tag, seg) -> bool:
+    def _fold_locked(self, win, worker_id, tag, part) -> bool:
         a = self.alphas[worker_id]
-        self.acc = _tree_add(self.acc, seg, a)
-        self.wsum += a
-        self.seen.add((worker_id, tag))
-        if len({w for w, _ in self.seen}) < self.quorum:
+        for i, leaf in part.items():
+            win.acc[i] = win.acc[i] + a * leaf.astype(jnp.float32)
+        win.wsum += a
+        win.seen.add((worker_id, tag))
+        if len({w for w, _ in win.seen}) < self.quorum:
             return False
-        self._apply_locked()
+        self._apply_locked(win)
         return True
 
-    def _drain_locked(self):
+    def _drain_locked(self, win):
         """Fold buffered early arrivals that the advancing window has
         caught up with (each fold may itself fire an apply)."""
         while True:
-            tags = sorted(t for t in self._early if t <= self.phase)
+            tags = sorted(t for t in win.early if t <= win.phase)
             if not tags:
                 return
-            bucket = self._early[tags[0]]
-            worker_id, seg = bucket.pop(0)
+            bucket = win.early[tags[0]]
+            worker_id, part = bucket.pop(0)
             if not bucket:
-                del self._early[tags[0]]
-            self._fold_locked(worker_id, tags[0], seg)
+                del win.early[tags[0]]
+            self._fold_locked(win, worker_id, tags[0], part)
 
-    def _apply_locked(self):
+    def _apply_locked(self, win):
         # rescale by the number of *contributions* (== distinct workers
         # in the synchronous case) — keeps the update equal to
         # core.diloco.window_outer_gradient when a straggler worker
         # lands two phases in one window
-        scale = (math.sqrt(len(self.seen)) if self.rescale else 1.0) \
-            / max(self.wsum, 1e-12)
-        outer_grad = jax.tree_util.tree_map(
-            lambda a: None if a is None else a * scale, self.acc)
+        scale = (math.sqrt(len(win.seen)) if self.rescale else 1.0) \
+            / max(win.wsum, 1e-12)
         params = self._params()
-        new_params, self.mom_state = nesterov_update(
-            outer_grad, self.mom_state, _tree32(params), lr=self.lr,
-            momentum=self.momentum, nesterov=self.nesterov)
-        cast = jax.tree_util.tree_map(
-            lambda n, o: None if o is None else n.astype(o.dtype),
-            new_params, params)
+        p_leaves = self.spec.flatten(params)
+        new_leaves = list(p_leaves)
+        for i in win.indices:
+            upd, st = nesterov_update(
+                {"x": win.acc[i] * scale},
+                {"momentum": {"x": win.mom[i]}},
+                {"x": p_leaves[i].astype(jnp.float32)},
+                lr=self.lr, momentum=self.momentum,
+                nesterov=self.nesterov)
+            new_leaves[i] = upd["x"].astype(p_leaves[i].dtype)
+            win.mom[i] = st["momentum"]["x"]
+        cast = self.spec.unflatten(new_leaves)
         self._write(cast)
-        self.updates += 1
-        applied_phase = self.phase
-        consumed = sorted(self.seen)
-        self.phase = applied_phase + 1
-        self._reset()
+        win.updates += 1
+        applied_phase = win.phase
+        consumed = sorted(win.seen)
+        win.phase = applied_phase + 1
+        self._reset_window(win)
         if self.db is not None:
             level, expert = self._ckpt_id()
             self.db.write(
                 {"params": cast, "momentum": self.mom_state},
                 path_id=-1, phase=applied_phase, step=self.updates,
                 kind="module", level=level, expert=expert,
+                fragment=win.fid,
                 extra={"consumed": [[int(w), int(t)] for w, t in consumed],
-                       "updates": int(self.updates)})
+                       "updates": int(win.updates),
+                       "frag_phase": int(applied_phase),
+                       "num_fragments": int(self.spec.num_fragments)})
 
     # -- recovery (TrainingService.resume) -----------------------------
     def ckpt_like(self):
         return {"params": self._params(), "momentum": self.mom_state}
 
-    def restore(self, row, tree) -> None:
-        """Reset to the state right after the apply recorded by ``row``."""
+    def restore_rows(self, rows) -> None:
+        """Reset to the state right after the last apply each fragment
+        recorded.  ``rows`` are this executor's ``kind="module"`` rows
+        in commit order; module params come from the newest row (the
+        store state at its write), each fragment's momentum/phase from
+        its own newest row, and every row's contribution keys are
+        marked consumed so the train-delta replay stays order-faithful."""
+        if not rows:
+            return
         with self._lock:
+            like = self.ckpt_like()
+            cache: dict = {}
+
+            def tree_of(row):
+                if row.file not in cache:
+                    cache[row.file] = load_tree(row.file, like)
+                return cache[row.file]
+
             cast = jax.tree_util.tree_map(
                 lambda n, o: None if o is None else jnp.asarray(
-                    n, dtype=o.dtype), tree["params"], self._params())
+                    n, dtype=o.dtype),
+                tree_of(rows[-1])["params"], self._params())
             self._write(cast)
-            self.mom_state = jax.tree_util.tree_map(
-                jnp.asarray, tree["momentum"])
-            self.phase = row.phase + 1
-            self.updates = int(row.extra.get("updates", row.step))
-            self._early.clear()
-            self._reset()
-
-    def mark_consumed(self, keys) -> None:
-        with self._lock:
-            self._consumed.update((int(w), int(t)) for w, t in keys)
+            latest: dict = {}
+            for r in rows:
+                fid = r.fragment if r.fragment >= 0 else 0
+                if fid >= self.spec.num_fragments:
+                    continue
+                latest[fid] = r
+                self.windows[fid].consumed.update(
+                    (int(w), int(t)) for w, t in
+                    r.extra.get("consumed", []))
+            for fid, r in latest.items():
+                win = self.windows[fid]
+                mom = self.spec.flatten(
+                    tree_of(r)["momentum"]["momentum"])
+                win.mom = {i: jnp.asarray(mom[i]) for i in win.indices}
+                win.phase = int(r.extra.get("frag_phase", r.phase)) + 1
+                win.updates = int(r.extra.get("updates", r.step))
+                win.early.clear()
+                self._reset_window(win)
 
 
 class _ModuleExecutor(_ExecutorBase):
     def __init__(self, store: ModuleStore, level: int, expert: int,
                  member_workers, alphas, *, lr, momentum, nesterov,
-                 rescale, quorum: float = 1.0, ckpt_db=None):
+                 rescale, quorum: float = 1.0, ckpt_db=None,
+                 fragments: int = 1):
         self.store = store
         self.level, self.expert = level, expert
         super().__init__(member_workers, alphas, lr=lr, momentum=momentum,
                          nesterov=nesterov, rescale=rescale, quorum=quorum,
-                         ckpt_db=ckpt_db)
+                         ckpt_db=ckpt_db, fragments=fragments)
 
     def _params(self):
         return self.store.module_params(self.level, self.expert)
@@ -245,11 +362,12 @@ class _SharedExecutor(_ExecutorBase):
 
     def __init__(self, store: ModuleStore, num_workers: int, alphas, *,
                  lr, momentum, nesterov, rescale, quorum: float = 1.0,
-                 ckpt_db=None):
+                 ckpt_db=None, fragments: int = 1):
         self.store = store
         super().__init__(range(num_workers), alphas, lr=lr,
                          momentum=momentum, nesterov=nesterov,
-                         rescale=rescale, quorum=quorum, ckpt_db=ckpt_db)
+                         rescale=rescale, quorum=quorum, ckpt_db=ckpt_db,
+                         fragments=fragments)
 
     def _params(self):
         return self.store.shared
@@ -268,11 +386,12 @@ class ShardedOuterExecutors:
     def __init__(self, store: ModuleStore, partition: PathPartition,
                  worker_paths, alphas=None, *, lr=0.7, momentum=0.9,
                  nesterov=True, rescale=True, quorum: float = 1.0,
-                 ckpt_db=None):
+                 ckpt_db=None, fragments: int = 1):
         worker_paths = np.asarray(worker_paths)
         W = len(worker_paths)
         if alphas is None:
             alphas = np.ones(W) / W
+        self.fragments = max(1, int(fragments))
         self.execs = {}
         for l in range(partition.num_levels):
             n_experts = int(partition.paths[:, l].max()) + 1
@@ -285,13 +404,13 @@ class ShardedOuterExecutors:
                 self.execs[(l, e)] = _ModuleExecutor(
                     store, l, e, members, alphas, lr=lr, momentum=momentum,
                     nesterov=nesterov, rescale=rescale, quorum=quorum,
-                    ckpt_db=ckpt_db)
+                    ckpt_db=ckpt_db, fragments=fragments)
         self.shared_exec = None
         if partition.shared_embeddings:
             self.shared_exec = _SharedExecutor(
                 store, W, alphas, lr=lr, momentum=momentum,
                 nesterov=nesterov, rescale=rescale, quorum=quorum,
-                ckpt_db=ckpt_db)
+                ckpt_db=ckpt_db, fragments=fragments)
 
     def _all(self) -> dict:
         out = dict(self.execs)
@@ -305,38 +424,45 @@ class ShardedOuterExecutors:
             ex.set_active(active_workers, phase=phase)
 
     def accumulate(self, worker_id: int, delta_tree,
-                   phase: int | None = None) -> list:
-        """Feed one path checkpoint; returns modules completed by it."""
+                   phase: int | None = None, fragment=None) -> list:
+        """Feed one path checkpoint (or one fragment / one send-slot's
+        worth of fragments of it); returns the modules with at least
+        one fragment window completed by it."""
         completed = []
         for key, ex in self.execs.items():
-            if ex.accumulate(worker_id, delta_tree, phase=phase):
+            if ex.accumulate(worker_id, delta_tree, phase=phase,
+                             fragment=fragment):
                 completed.append(key)
         if self.shared_exec is not None:
             if self.shared_exec.accumulate(worker_id, delta_tree,
-                                           phase=phase):
+                                           phase=phase,
+                                           fragment=fragment):
                 completed.append("shared")
         return completed
 
+    def frag_bytes(self, worker_id: int, fragment: int,
+                   comm_dtype: str = "fp32") -> int:
+        """Simulated wire bytes worker ``worker_id`` ships for fragment
+        ``fragment`` of one report (sum over the modules it feeds)."""
+        total = 0
+        for ex in self._all().values():
+            if (worker_id in ex.members
+                    and fragment < ex.spec.num_fragments):
+                total += ex.spec.wire_bytes(fragment, comm_dtype)
+        return total
+
     def restore_from_db(self, db) -> None:
-        """Rebuild every executor's params/momentum/window-phase from
-        the latest ``kind="module"`` row, and mark the contribution keys
-        recorded by *all* module rows as consumed so a subsequent train
-        delta replay is exactly order-faithful."""
-        latest: dict = {}
-        consumed: dict = {}
+        """Rebuild every executor's params, per-fragment momentum and
+        window phases from its ``kind="module"`` rows, and mark the
+        contribution keys recorded by *all* rows as consumed so a
+        subsequent train-delta replay is exactly order-faithful."""
+        by_mid: dict = {}
         for row in db.rows(kind="module"):
-            k = (row.level, row.expert)
-            latest[k] = row
-            consumed.setdefault(k, []).extend(row.extra.get("consumed", []))
-        for k, row in latest.items():
-            ex = self._all().get(k)
-            if ex is None:
-                continue
-            ex.restore(row, load_tree(row.file, ex.ckpt_like()))
-        for k, keys in consumed.items():
+            by_mid.setdefault((row.level, row.expert), []).append(row)
+        for k, rows in by_mid.items():
             ex = self._all().get(k)
             if ex is not None:
-                ex.mark_consumed(keys)
+                ex.restore_rows(rows)
 
     @property
     def total_updates(self) -> int:

@@ -32,6 +32,7 @@ accumulation is order-sensitive.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 import weakref
@@ -40,6 +41,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fragments import (COMM_DTYPES, fragment_send_slot,
+                                  quantize_with_feedback)
 from repro.core.module_store import ModuleStore
 from repro.core.partition import make_partition
 from repro.data.loader import ShardLoader, phase_batches
@@ -91,11 +94,30 @@ class TrainingService:
             # plus the straggler fold depth (see README)
             ckpt_retention = max(8, 4 * (max_phase_lag + 2))
         self.db = CheckpointDB(ckpt_root, max_rows_per_path=ckpt_retention)
+        if dcfg.comm_dtype not in COMM_DTYPES:
+            raise ValueError(f"comm_dtype {dcfg.comm_dtype!r} not in "
+                             f"{COMM_DTYPES}")
         self.execs = ShardedOuterExecutors(
             self.store, self.partition, self.worker_paths, alphas,
             lr=dcfg.outer_lr, momentum=dcfg.outer_momentum,
             nesterov=dcfg.outer_nesterov, rescale=dcfg.grad_norm_rescale,
-            quorum=dcfg.async_quorum, ckpt_db=self.db)
+            quorum=dcfg.async_quorum, ckpt_db=self.db,
+            fragments=dcfg.outer_fragments)
+        # streaming fragment-wise outer sync (core/fragments.py): every
+        # report is split into fragments; slot-0 fragments fold at the
+        # commit, later slots stay *in flight* — parked here — while
+        # the shard already runs its next phase, and fold at the
+        # shard's next commit (or at a run/run_phase flush point,
+        # recorded as a kind="flush" row so resume replays the exact
+        # fold order).
+        self._comm_dtype = dcfg.comm_dtype
+        self._stagger = dcfg.fragment_stagger
+        self._pending: dict = {i: [] for i in range(W)}   # s -> [(ph, f)]
+        self._pending_payload: dict = {}                  # (s, ph) -> wire
+        self._pending_count: dict = {}                    # (s, ph) -> refs
+        self._qresid: dict = {i: None for i in range(W)}  # error feedback
+        self.comm_stats = {"peak_sync_bytes": 0, "total_comm_bytes": 0,
+                           "sends": 0}
         self.loaders = [ShardLoader(s, batch_size, seed=seed + i)
                         for i, s in enumerate(dataset.shards)]
         self.opt_states: dict = {i: None for i in range(W)}
@@ -230,19 +252,106 @@ class TrainingService:
         with self._commit_lock:
             if (shard, t) in self._phase_done:
                 return {"shard": shard, "stale": True}  # lost a retry race
+            # wire coding: quantize the outer delta (symmetric int8/int4
+            # per-leaf scales); the quantization error stays worker-side
+            # as an error-feedback residual added to the next phase's
+            # delta.  The *wire* payload is what persists and what the
+            # executors fold — the resume replay is therefore exact.
+            wire = delta
+            if self._comm_dtype != "fp32":
+                wire, resid = quantize_with_feedback(
+                    delta, self._qresid[shard], self._comm_dtype)
+                self._qresid[shard] = resid
+                self.db.write(resid, path_id=shard, phase=t,
+                              step=start_step + tau, kind="qres")
             # the artifacts the paper ships via GFS: the delta (consumed
             # online by executors + the resume replay) and the inner
             # optimizer state (resume only)
-            self.db.write(delta, path_id=shard, phase=t,
+            self.db.write(wire, path_id=shard, phase=t,
                           step=start_step + tau, kind="train",
-                          extra={"loss": loss})
+                          extra={"loss": loss,
+                                 "comm_dtype": self._comm_dtype,
+                                 "comm_bytes": self._report_bytes(shard)})
             self.db.write(opt, path_id=shard, phase=t,
                           step=start_step + tau, kind="opt")
             self.opt_states[shard] = opt
             self.losses[(t, shard)] = loss
-            self.execs.accumulate(shard, delta, phase=t)
+            self._ingest_locked(shard, t, wire)
             self._complete(shard, t)
         return {"shard": shard, "loss": loss}
+
+    # -- streaming fragment hand-off -----------------------------------
+    def _report_bytes(self, shard: int) -> int:
+        return sum(self.execs.frag_bytes(shard, f, self._comm_dtype)
+                   for f in range(self.execs.fragments))
+
+    def _ingest_locked(self, shard: int, t: int, wire,
+                       record_stats: bool = True) -> None:
+        """Hand one report off to the executors on the fragment send
+        schedule: the shard's previous in-flight fragments are now due
+        (its next phase has begun), slot-0 fragments of this report
+        fold immediately, later slots are parked in flight.  Each slot
+        is one simulated send instant for the comms accounting."""
+        self._flush_shard_locked(shard)
+        K = self.execs.fragments
+        slots: dict = {}
+        for f in range(K):
+            slots.setdefault(
+                fragment_send_slot(f, self._stagger, K), []).append(f)
+        for slot in sorted(slots):
+            frags = slots[slot]
+            if record_stats:
+                b = sum(self.execs.frag_bytes(shard, f, self._comm_dtype)
+                        for f in frags)
+                self.comm_stats["sends"] += 1
+                self.comm_stats["total_comm_bytes"] += b
+                self.comm_stats["peak_sync_bytes"] = max(
+                    self.comm_stats["peak_sync_bytes"], b)
+            if slot == 0:
+                # one call folds the whole slot: the delta is sliced
+                # and flattened once per executor, not once per fragment
+                self.execs.accumulate(shard, wire, phase=t, fragment=frags)
+            else:
+                for f in frags:
+                    self._pending[shard].append((t, f))
+                    self._pending_count[(shard, t)] = \
+                        self._pending_count.get((shard, t), 0) + 1
+                self._pending_payload[(shard, t)] = wire
+
+    def _flush_shard_locked(self, shard: int) -> bool:
+        items = self._pending[shard]
+        if not items:
+            return False
+        self._pending[shard] = []
+        for ph, group in itertools.groupby(items, key=lambda it: it[0]):
+            frags = [f for _, f in group]
+            wire = self._pending_payload[(shard, ph)]
+            self.execs.accumulate(shard, wire, phase=ph, fragment=frags)
+            self._pending_count[(shard, ph)] -= len(frags)
+            if self._pending_count[(shard, ph)] == 0:
+                del self._pending_count[(shard, ph)]
+                del self._pending_payload[(shard, ph)]
+        return True
+
+    def _flush_all_locked(self, write_marker: bool = True) -> None:
+        """Fold every parked fragment (run/run_phase sync points).  The
+        marker row makes the resume replay flush at the same point, so
+        partial windows rebuild in the original fold order."""
+        flushed = False
+        for s in range(self.num_shards):
+            flushed |= self._flush_shard_locked(s)
+        if flushed and write_marker:
+            self.db.write({"flushed": jnp.zeros((1,), jnp.int32)},
+                          path_id=-1, phase=max(self.clock.values()),
+                          step=0, kind="flush")
+
+    @property
+    def pending_fragments(self) -> list:
+        """Sorted (shard, phase, fragment) triples still in flight."""
+        with self._commit_lock:
+            return sorted((s, ph, f)
+                          for s, items in self._pending.items()
+                          for ph, f in items)
 
     def _complete(self, shard: int, t: int):
         """Commit a finished phase and immediately pump any shard whose
@@ -313,6 +422,10 @@ class TrainingService:
                         f"service did not reach phase {target}: "
                         f"clocks={self.clock} queue={self.queue.stats()}")
                 self._clock_cv.wait(timeout=0.1)
+        # sync point: fold fragments still in flight from the last
+        # phases (a marker row keeps the resume replay order-faithful)
+        with self._commit_lock:
+            self._flush_all_locked()
         last = target - 1
         mean_loss = float(np.mean(
             [self.losses[(last, s)] for s in range(self.num_shards)])) \
@@ -322,6 +435,7 @@ class TrainingService:
                 "preemptions": self.pool.preemptions,
                 "monitor_restarts": self.monitor.restarts,
                 "max_observed_lag": self.max_observed_lag,
+                "comm": dict(self.comm_stats),
                 "queue": self.queue.stats()}
 
     # ------------------------------------------------------------------
@@ -361,6 +475,8 @@ class TrainingService:
                         f"phase {self.phase} did not finish: "
                         f"{self.queue.stats()}")
                 self._clock_cv.wait(timeout=0.1)
+        with self._commit_lock:
+            self._flush_all_locked()   # barrier: no fragment in flight
         mean_loss = float(np.mean(
             [self.losses[(self.phase, s)] for s in active]))
         self.step += tau
@@ -385,9 +501,11 @@ class TrainingService:
         # 1. outer state: module params + momentum + window phases +
         #    consumed contribution keys
         self.execs.restore_from_db(self.db)
-        # 2. per-path clocks, losses, inner optimizer state, snapshots
+        # 2. per-path clocks, losses, inner optimizer state, snapshots,
+        #    quantizer error-feedback residuals
         latest_opt: dict = {}
         latest_snap: dict = {}
+        latest_qres: dict = {}
         max_step = 0
         for r in rows:
             if r.kind == "train":
@@ -403,6 +521,9 @@ class TrainingService:
             elif r.kind == "snap":
                 if r.phase >= latest_snap.get(r.path_id, (-1, None))[0]:
                     latest_snap[r.path_id] = (r.phase, r)
+            elif r.kind == "qres":
+                if r.phase >= latest_qres.get(r.path_id, (-1, None))[0]:
+                    latest_qres[r.path_id] = (r.phase, r)
         assembled = {s: self.store.assemble(int(self.worker_paths[s]))
                      for s in range(self.num_shards)}
         for s, (_, r) in latest_opt.items():
@@ -410,19 +531,38 @@ class TrainingService:
         for s, (ph, r) in latest_snap.items():
             if ph == self.clock[s]:   # in-flight phase, not yet committed
                 self._snapshots[s] = (ph, load_tree(r.file, assembled[s]))
-        # 3. replay train deltas in row order (== original accumulation
-        #    order); executors skip keys already consumed by an applied
-        #    update, so this exactly rebuilds partial windows + early
-        #    buffers
+        # 3. replay train deltas + flush markers in row order (== the
+        #    original fold order); executors skip keys already consumed
+        #    by an applied update and the ingest re-parks still-deferred
+        #    fragments, so this exactly rebuilds partial windows, early
+        #    buffers and the in-flight fragment set
         like32 = {s: jax.tree_util.tree_map(
             lambda x: x.astype(jnp.float32), assembled[s])
             for s in range(self.num_shards)}
+        for s, (_, r) in latest_qres.items():
+            # a qres row is only adopted if its phase actually
+            # committed (clock has advanced past it): the residual row
+            # is written just before its train row, so a kill in that
+            # window leaves an *orphan* residual whose wire was never
+            # folded — adopting it would double-subtract the payload
+            # when the phase re-runs.  Falling back to the previous
+            # committed residual reproduces exactly the state the
+            # re-run's quantization originally started from.
+            if r.phase >= self.clock[s]:
+                prior = [q for q in rows
+                         if q.kind == "qres" and q.path_id == s
+                         and q.phase < self.clock[s]]
+                r = prior[-1] if prior else None
+            if r is not None:
+                self._qresid[s] = load_tree(r.file, like32[s])
         for r in rows:
-            if r.kind != "train":
-                continue
-            self.execs.accumulate(
-                r.path_id, load_tree(r.file, like32[r.path_id]),
-                phase=r.phase)
+            if r.kind == "train":
+                self._ingest_locked(
+                    r.path_id, r.phase,
+                    load_tree(r.file, like32[r.path_id]),
+                    record_stats=False)
+            elif r.kind == "flush":
+                self._flush_all_locked(write_marker=False)
         # 4. async bookkeeping: outstanding target covers every phase
         #    that was started (committed or in-flight)
         self._target = max(

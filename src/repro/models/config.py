@@ -139,6 +139,21 @@ class DiPaCoConfig:
     # module's outer update once this fraction of its contributors has
     # reported; stragglers fold into the next accumulation window.
     async_quorum: float = 1.0
+    # streaming fragment-wise outer sync (Streaming DiLoCo, Douillard
+    # et al. 2025): partition each module's parameter tree into
+    # ``outer_fragments`` fragments, each with its own accumulation
+    # window and Nesterov state.  ``fragment_stagger`` > 0 staggers the
+    # fragments' sync instants across the phase (fragment f is sent at
+    # slot (f * stagger) mod K; slot 0 = the phase boundary, later
+    # slots are in flight while the reporting shard already runs its
+    # next phase), flattening the phase-boundary bandwidth burst.
+    # ``comm_dtype`` quantizes the outer-gradient wire payload
+    # ("fp32" | "int8" | "int4", symmetric per-leaf scales) with an
+    # error-feedback residual kept worker-side.  The defaults
+    # (1, 0, "fp32") are bit-identical to unfragmented DiLoCo.
+    outer_fragments: int = 1
+    fragment_stagger: int = 0
+    comm_dtype: str = "fp32"
 
     @property
     def num_paths(self) -> int:

@@ -421,6 +421,141 @@ def test_auto_rollback_on_bake_regression(plane):
 
 
 # ---------------------------------------------------------------------
+# chaos: publisher killed mid-promote (fault injection in the registry)
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("point", ["promote:pre_pointer",
+                                   "pointer:pre_replace"])
+def test_chaos_publisher_killed_mid_promote(plane, point):
+    """The publisher dies mid-promote — either before the pointer write
+    starts or in the worst window (tmp pointer written, atomic replace
+    never ran).  The SERVING pointer must never dangle: the surviving
+    registry, a fresh process on the same root, and the engines all
+    keep serving the old version; the retried cycle promotes the same
+    candidate (no version churn), and rollback stays bit-exact."""
+    import json
+    import os
+    reg, db = plane["reg"], plane["db"]
+    pub = Publisher(db, reg)
+    pub.bootstrap()
+    v1_paths = reg.serving_paths()
+    _outer_phase(plane, 0)
+
+    def crash(p):
+        if p == point:
+            raise RuntimeError(f"killed at {p}")
+
+    reg.fault_injector = crash
+    with pytest.raises(RuntimeError, match="killed at"):
+        pub.publish_cycle()
+    # no dangle: the on-disk pointer still names version 1, which has a
+    # manifest file, and in-memory state rolled back to match
+    assert reg.serving_version == 1
+    with open(reg._ptr_path()) as f:
+        ptr = json.load(f)
+    assert ptr["serving"] == 1
+    assert os.path.exists(reg._manifest_path(ptr["serving"]))
+    _assert_paths_equal(reg.serving_paths(), v1_paths)
+    # a fresh process on the same root (post-crash restart) agrees
+    reg2 = DeploymentRegistry(plane["cfg"], plane["dcfg"], reg.root,
+                              key=jax.random.PRNGKey(0),
+                              base_params=plane["base"])
+    assert reg2.serving_version == 1
+    _assert_paths_equal(reg2.serving_paths(), v1_paths)
+    # recovery: the next cycle re-cuts the same candidate (dedupe — no
+    # churn version) and the promote goes through
+    reg.fault_injector = None
+    out = pub.publish_cycle()
+    assert out["cut"] == 2 and out["promoted"] == 2
+    assert reg.versions == [1, 2]
+    assert reg.serving_version == 2
+    # rollback after the recovered promote is still bit-exact
+    assert reg.rollback() == 1
+    _assert_paths_equal(reg.serving_paths(), v1_paths)
+    pub.close()
+
+
+def test_publisher_restart_recovers_unpromoted_cut(plane):
+    """Process death in the cut->promote window (the manifest is on
+    disk, the SERVING pointer never moved): a restarted publisher must
+    NOT treat the cut as published — it re-cuts the same deduped
+    version and promotes it, instead of stranding the candidate until
+    the next phase completes."""
+    reg, db = plane["reg"], plane["db"]
+    pub = Publisher(db, reg)
+    pub.bootstrap()
+    _outer_phase(plane, 0)
+    m = pub.poll()                 # cut persisted ...
+    assert m is not None and m.version == 2
+    pub.close()                    # ... then the process dies: no promote
+    assert reg.serving_version == 1
+    reg2 = DeploymentRegistry(plane["cfg"], plane["dcfg"], reg.root,
+                              key=jax.random.PRNGKey(0),
+                              base_params=plane["base"])
+    pub2 = Publisher(db, reg2)
+    out = pub2.publish_cycle()
+    assert out["cut"] == 2 and out["promoted"] == 2   # recovered, no churn
+    assert reg2.versions == [1, 2]
+    assert reg2.serving_version == 2
+    pub2.close()
+
+
+def test_quarantine_survives_publisher_restart(plane):
+    """A canary-rejected composition stays quarantined across publisher
+    restarts (the quarantine is persisted in the registry root): the
+    unpromoted-cut recovery backoff must not resurrect it."""
+    reg, db = plane["reg"], plane["db"]
+
+    class RejectAll:
+        def evaluate(self, cand, serv):
+            return CanaryReport(9.9, 1.0, 0.0, False, "regression")
+
+    pub = Publisher(db, reg, gate=RejectAll())
+    pub.bootstrap()
+    _outer_phase(plane, 0)
+    out = pub.publish_cycle()
+    assert out["rejected"] == 2 and reg.serving_version == 1
+    pub.close()
+    # restart: the rejected cut is *handled*, not a stranded candidate
+    pub2 = Publisher(db, reg, gate=RejectAll())
+    assert pub2._quarantined            # reloaded from disk
+    out = pub2.publish_cycle()
+    assert out["promoted"] is None and out["rejected"] is None
+    assert reg.serving_version == 1 and reg.versions == [1, 2]
+    pub2.close()
+
+
+def test_chaos_background_publisher_survives_promote_crash(plane):
+    """Same crash on the daemon thread: the cycle error is contained,
+    the thread stays alive, and once the fault clears the *same*
+    candidate version is promoted."""
+    reg, db = plane["reg"], plane["db"]
+    pub = Publisher(db, reg)
+    pub.bootstrap()
+
+    def crash(p):
+        if p == "pointer:pre_replace":
+            raise RuntimeError("killed mid-promote")
+
+    reg.fault_injector = crash
+    pub.start(period=0.02)
+    _outer_phase(plane, 0)
+    deadline = time.time() + 10.0
+    while pub.cycle_errors == 0 and time.time() < deadline:
+        time.sleep(0.02)
+    assert pub.cycle_errors >= 1
+    assert pub._thread.is_alive()
+    assert reg.serving_version == 1        # never half-promoted
+    reg.fault_injector = None
+    pub._event.set()
+    while reg.serving_version == 1 and time.time() < deadline:
+        time.sleep(0.02)
+    assert reg.serving_version == 2        # the same candidate, retried
+    assert reg.versions == [1, 2]          # no churn from the retries
+    pub.close()
+
+
+# ---------------------------------------------------------------------
 # engine hot-swap
 # ---------------------------------------------------------------------
 

@@ -570,3 +570,55 @@ def test_midphase_kill_resume_bit_compatible(tiny_cfg, tiny_docs,
         _assert_paths_equal(ref, res, exact=True)
         ref.shutdown()
         res.shutdown()
+
+
+@pytest.mark.slow
+def test_fragment_boundary_kill_resume_bit_compatible(tiny_cfg, tiny_docs,
+                                                      tiny_base):
+    """Killed at a *fragment* boundary — mid-phase, with slot-0
+    fragments of the committed shards already folded and their
+    staggered fragments still in flight (and a quantizer residual per
+    shard) — the resume rebuilds the exact in-flight fragment set and
+    continues bit-identically to an uninterrupted run."""
+    ds = _tiny_ds(tiny_docs)
+    base, _ = tiny_base
+    key = jax.random.PRNGKey(0)
+    dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=2, outer_fragments=3,
+                        fragment_stagger=1, comm_dtype="int8")
+    with tempfile.TemporaryDirectory() as rA, \
+            tempfile.TemporaryDirectory() as rB:
+        ref = TrainingService(tiny_cfg, dcfg, ds, ckpt_root=rA,
+                              **_service_kwargs(key, base))
+        for _ in range(3):          # same run()-flush points as the victim
+            ref.run(1, tau=2)
+        victim = TrainingService(tiny_cfg, dcfg, ds, ckpt_root=rB,
+                                 max_attempts=1,
+                                 **_service_kwargs(key, base))
+        victim.run(1, tau=2)
+        inner = victim._handle
+
+        def poison(task, _inner=inner):
+            if task.payload["shard_id"] == 3 and task.payload["phase"] == 1:
+                raise RuntimeError("injected machine loss")
+            return _inner(task)
+
+        victim.pool.handler = poison
+        with pytest.raises(PhaseTimeoutError):
+            victim.run(1, tau=2, timeout=8.0)
+        # fragment boundary: shards 0-2 committed phase 1, their slot-0
+        # fragment folded, staggered fragments 1..2 still in flight
+        assert victim.clock == {0: 2, 1: 2, 2: 2, 3: 1}
+        inflight = victim.pending_fragments
+        assert inflight == [(s, 1, f) for s in range(3) for f in (1, 2)]
+        victim.shutdown()
+        res = TrainingService.resume(tiny_cfg, dcfg, ds, ckpt_root=rB,
+                                     **_service_kwargs(key, base))
+        assert res.clock == {0: 2, 1: 2, 2: 2, 3: 1}
+        assert res.pending_fragments == inflight   # in-flight set rebuilt
+        assert all(res._qresid[s] is not None for s in range(3))
+        res.run(0, tau=2)                  # finish the outstanding phase
+        assert res.pending_fragments == []
+        res.run(1, tau=2)
+        _assert_paths_equal(ref, res, exact=True)
+        ref.shutdown()
+        res.shutdown()
