@@ -10,8 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.configs import get_smoke_config
-from repro.core.dipaco import DiPaCoTrainer
 from repro.core.routing import kmeans_fit, prefix_features
 from repro.core.routing.kmeans import kmeans_assign
 from repro.data import SyntheticCorpus, shard_documents
@@ -39,9 +39,11 @@ def main():
 
     print("== 3. DiPaCo 2x2 training (Algorithm 1, tau=20)")
     dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=20)
-    tr = DiPaCoTrainer(cfg, dcfg, ds, key=key, base_params=base,
-                       batch_size=8, peak_lr=3e-3, warmup=10,
-                       total_steps=400)
+    # backend="vector" is the in-memory Algorithm 1 trainer; swap in
+    # "service" (async infra) or "mesh" (real collectives) unchanged
+    tr = repro.make_trainer(cfg, dcfg, ds, backend="vector", key=key,
+                            base_params=base, batch_size=8,
+                            peak_lr=3e-3, warmup=10, total_steps=400)
     for ph in range(4):
         m = tr.run_phase()
         print(f"   phase {ph}: mean loss {m.mean_loss:.3f} "

@@ -8,15 +8,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.configs import get_smoke_config
-from repro.core.dipaco import DiPaCoTrainer
 from repro.core.routing import (prefix_features,
                                 train_discriminative_router)
 from repro.data import SyntheticCorpus, shard_documents
 from repro.models import api
 from repro.models.config import DiPaCoConfig
-from repro.serving import (ContinuousBatchingEngine, PathServingEngine,
-                           poisson_trace)
+from repro.serving import (ContinuousBatchingEngine, EngineOptions,
+                           PathServingEngine, poisson_trace)
 
 
 def main():
@@ -29,9 +29,11 @@ def main():
 
     print("== train 4 paths quickly (oracle domain shards)")
     ds = shard_documents(docs, doms % 4, 4)
-    tr = DiPaCoTrainer(cfg, DiPaCoConfig(levels=(2, 2), inner_steps=20),
-                       ds, key=key, base_params=base, batch_size=8,
-                       peak_lr=3e-3, warmup=10, total_steps=200)
+    tr = repro.make_trainer(cfg, DiPaCoConfig(levels=(2, 2),
+                                              inner_steps=20),
+                            ds, backend="vector", key=key,
+                            base_params=base, batch_size=8,
+                            peak_lr=3e-3, warmup=10, total_steps=200)
     for _ in range(3):
         tr.run_phase()
     paths = [tr.path_params(p) for p in range(4)]
@@ -46,8 +48,8 @@ def main():
         np.asarray(scores.argmax(axis=1)), 4, steps=200)
 
     print("== serve a batch of requests")
-    engine = PathServingEngine(cfg, paths, router=router,
-                               feat_params=base, cache_len=96)
+    engine = PathServingEngine(cfg, paths, options=EngineOptions(
+        router=router, feat_params=base, cache_len=96))
     prompts, pdoms = corpus.sample_documents(8, seed=123,
                                              return_domains=True)
     res = engine.generate(prompts[:, :16], max_new=16)
@@ -60,9 +62,9 @@ def main():
     print(f"   path switches during generation: {res2.switches}")
 
     print("== continuous batching: Poisson arrivals into slot arenas")
-    cont = ContinuousBatchingEngine(cfg, paths, router=router,
-                                    feat_params=base, cache_len=96,
-                                    slots_per_path=4, reroute_every=8)
+    cont = ContinuousBatchingEngine(cfg, paths, options=EngineOptions(
+        router=router, feat_params=base, cache_len=96,
+        slots_per_path=4, reroute_every=8))
     cont.warmup()   # pre-compile the bounded (bucket, batch) jit set
     trace = poisson_trace(16, rate=40.0, prompt_lens=(12, 16, 24),
                           max_new=16, vocab_size=cfg.vocab_size, seed=11,

@@ -28,14 +28,14 @@ import time
 
 import jax
 
+import repro
 from repro.configs import get_smoke_config
 from repro.data import SyntheticCorpus, shard_documents
 from repro.deploy import CanaryGate, DeploymentRegistry, Publisher
-from repro.infra import TrainingService
 from repro.models import api
 from repro.models.config import DiPaCoConfig
-from repro.serving import (ContinuousBatchingEngine, poisson_trace,
-                           prefix_hash_router)
+from repro.serving import (ContinuousBatchingEngine, EngineOptions,
+                           poisson_trace, prefix_hash_router)
 
 
 def main():
@@ -52,11 +52,13 @@ def main():
 
     with tempfile.TemporaryDirectory() as root:
         print("== training service (async phase pipelining)")
-        svc = TrainingService(cfg, dcfg, ds, key=key,
-                              ckpt_root=os.path.join(root, "db"),
-                              base_params=base, batch_size=8,
-                              peak_lr=2e-3, warmup=10, total_steps=200,
-                              num_workers=2, max_phase_lag=1)
+        svc = repro.make_trainer(cfg, dcfg, ds, backend="service",
+                                 key=key,
+                                 ckpt_root=os.path.join(root, "db"),
+                                 base_params=base, batch_size=8,
+                                 peak_lr=2e-3, warmup=10,
+                                 total_steps=200, num_workers=2,
+                                 max_phase_lag=1)
 
         print("== deployment registry + canary-gated publisher")
         registry = DeploymentRegistry(cfg, dcfg,
@@ -70,9 +72,10 @@ def main():
         pub.start(period=0.2)            # woken by module-row writes
 
         print("== engine serving from the registry (drain hot-swap)")
-        engine = ContinuousBatchingEngine(
-            cfg, registry=registry, cache_len=48, slots_per_path=2,
-            swap_policy="drain", route_fn=prefix_hash_router(num_paths))
+        engine = ContinuousBatchingEngine(cfg, options=EngineOptions(
+            registry=registry, cache_len=48, slots_per_path=2,
+            swap_policy="drain",
+            route_fn=prefix_hash_router(num_paths)))
         engine.warmup()
 
         trainer = threading.Thread(

@@ -24,7 +24,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core.dipaco import DiPaCoTrainer
 from repro.core.routing import (kmeans_fit, prefix_features,
                                 train_discriminative_router)
 from repro.core.routing.discriminative import score_documents
@@ -73,9 +72,12 @@ def main():
 
     dcfg = DiPaCoConfig(levels=levels, inner_steps=tau,
                         early_stopping=True)
-    tr = DiPaCoTrainer(cfg, dcfg, ds, key=key, base_params=base,
-                       batch_size=bs, peak_lr=2e-3, warmup=tau,
-                       total_steps=args.phases * tau)
+    # unified factory: backend="vector" is the in-memory Algorithm 1
+    # trainer; "mesh" would run the same phases through real collectives
+    from repro.training import make_trainer
+    tr = make_trainer(cfg, dcfg, ds, backend="vector", key=key,
+                      base_params=base, batch_size=bs, peak_lr=2e-3,
+                      warmup=tau, total_steps=args.phases * tau)
     db = CheckpointDB(args.ckpt)
 
     for ph in range(args.phases):

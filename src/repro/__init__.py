@@ -1,0 +1,36 @@
+"""DiPaCo reproduction.
+
+Top-level lazy re-exports (PEP 562) of the unified training/serving
+API, so ``import repro`` stays free of jax initialization and heavy
+submodule imports until an attribute is actually used:
+
+    repro.make_trainer(cfg, dcfg, dataset, backend="mesh", key=key)
+    repro.EngineOptions(registry=reg, swap_policy="live")
+"""
+from __future__ import annotations
+
+import importlib
+
+_LAZY = {
+    "make_trainer": "repro.training",
+    "trainer_class": "repro.training",
+    "Trainer": "repro.training",
+    "BACKENDS": "repro.training",
+    "PhaseMetrics": "repro.core.dipaco",
+    "EngineOptions": "repro.serving.engine",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    value = getattr(importlib.import_module(mod), name)
+    globals()[name] = value     # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(list(globals()) + __all__))

@@ -25,17 +25,34 @@ def _is_layer_leaf(axes_leaf, shape, num_repeats):
             and len(shape) >= 2 and shape[1] == num_repeats)
 
 
+def mix_leaf(d, ax, mix_layers, mix_shared):
+    """Mix one worker-stacked (W, ...) leaf with the per-repeat layer
+    matrix or the shared matrix — the single per-leaf mixing op both
+    the full-tree :func:`mix_deltas` and the per-fragment mesh reduce
+    (launch/steps.py) lower to, so the two are bit-identical by
+    construction."""
+    R = mix_layers.shape[0]
+    d32 = d.astype(jnp.float32)
+    if _is_layer_leaf(ax, d.shape, R):
+        return jnp.einsum("rwv,vr...->wr...", mix_layers, d32)
+    return jnp.einsum("wv,v...->w...", mix_shared, d32)
+
+
 def mix_deltas(deltas, axes, mix_layers, mix_shared):
     """deltas: worker-stacked (W, ...) tree; returns mixed outer gradients."""
-    R = mix_layers.shape[0]
+    return P.tree_map_with_axes(
+        lambda d, ax: mix_leaf(d, ax, mix_layers, mix_shared), deltas, axes)
 
-    def mix_one(d, ax):
-        d32 = d.astype(jnp.float32)
-        if _is_layer_leaf(ax, d.shape, R):
-            return jnp.einsum("rwv,vr...->wr...", mix_layers, d32)
-        return jnp.einsum("wv,v...->w...", mix_shared, d32)
 
-    return P.tree_map_with_axes(mix_one, deltas, axes)
+def leaf_axes_list(template, axes) -> list:
+    """Per-leaf logical-axes tuples aligned with
+    ``jax.tree_util.tree_flatten(template)`` order (the order
+    ``core.fragments.FragmentSpec`` indexes leaves by)."""
+    paired = P.tree_map_with_axes(lambda l, a: (l, tuple(a)),
+                                  template, axes)
+    leaves = jax.tree_util.tree_flatten(
+        paired, is_leaf=lambda x: isinstance(x, tuple))[0]
+    return [ax for _, ax in leaves]
 
 
 def outer_gradients(worker_params, global_params, axes, mix_layers,
@@ -132,6 +149,140 @@ def streaming_outer_step(worker_params, global_params, frag_states, axes,
         w_leaves[i] = g_leaves[i].astype(w_leaves[i].dtype)
     new_worker = spec.unflatten(w_leaves)
     return new_worker, new_global, new_states
+
+
+def rowwise_quantize_with_feedback(delta, residual, comm_dtype):
+    """Per-worker-row ``quantize_with_feedback`` on worker-stacked
+    leaves: each worker quantizes its own delta with its own scale
+    (exactly what it would do before putting bytes on a real wire), so
+    the stacked oracle and the per-device mesh step run the identical
+    per-row op sequence regardless of how rows are sharded.
+
+    ``delta``/``residual`` are trees of (W, ...) leaves; ``residual``
+    may be ``None`` (no carried error yet).  Returns
+    ``(wire, new_residual)`` with ``new_residual=None`` for fp32.
+    """
+    from repro.core.fragments import quantize_with_feedback
+
+    if comm_dtype == "fp32":
+        return delta, None
+    if residual is None:
+        residual = jax.tree_util.tree_map(
+            lambda d: jnp.zeros(jnp.shape(d), jnp.float32), delta)
+    return jax.vmap(
+        lambda d, r: quantize_with_feedback(d, r, comm_dtype))(
+            delta, residual)
+
+
+def make_fragment_delta_fn(comm_dtype: str):
+    """jitted ``(w_f, g_f, resid_f) -> (wire_f, new_resid_f)`` over one
+    fragment's ``{leaf_idx: (W, ...)}`` dicts: delta = global - worker,
+    then per-worker-row quantize with error feedback.  Both the
+    single-process oracle and the mesh phase call THIS function, so
+    their wire payloads are bit-identical by construction (jit fusion
+    included)."""
+    def fn(w_f, g_f, resid_f):
+        delta = {i: g_f[i].astype(jnp.float32) - w_f[i].astype(jnp.float32)
+                 for i in w_f}
+        return rowwise_quantize_with_feedback(delta, resid_f, comm_dtype)
+
+    return jax.jit(fn)
+
+
+def make_fragment_apply_fn(*, lr=0.7, momentum=0.9, nesterov=True):
+    """jitted per-fragment outer update: ``(og_f, state_f, g_f, w_f) ->
+    (new_g_f, new_state_f, new_w_f)`` — one nesterov_update per leaf,
+    elementwise over worker rows so sharding never changes a value.
+    Shared by the oracle and the mesh phase for bit-exactness; buffers
+    are donated where the backend supports it (CPU ignores
+    donation)."""
+    def fn(og_f, state_f, g_f, w_f):
+        new_g, new_s, new_w = {}, {}, {}
+        for i in og_f:
+            upd, st = nesterov_update(
+                {"x": og_f[i]}, {"momentum": {"x": state_f[i]}},
+                {"x": g_f[i]}, lr=lr, momentum=momentum,
+                nesterov=nesterov)
+            new_g[i] = upd["x"]
+            new_s[i] = st["momentum"]["x"]
+            new_w[i] = upd["x"].astype(w_f[i].dtype)
+        return new_g, new_s, new_w
+
+    donate = () if jax.default_backend() == "cpu" else (1, 2, 3)
+    return jax.jit(fn, donate_argnums=donate)
+
+
+def segmented_streaming_phase(inner_seg, worker_params, global_params,
+                              frag_states, residuals, axes, mix_layers,
+                              mix_shared, spec, *, comm_dtype="fp32",
+                              lr=0.7, momentum=0.9, nesterov=True):
+    """Single-process oracle for the *overlapped* mesh streaming
+    schedule (Streaming DiLoCo with true intra-phase boundaries).
+
+    The phase is split into ``K = spec.num_fragments`` inner segments;
+    ``inner_seg(s, worker_params) -> worker_params`` runs segment
+    ``s``'s inner steps.  The per-iteration order is the mesh dispatch
+    pipeline::
+
+        seg(s)  ->  apply(s-1)  ->  delta(s) -> quantize -> mix
+
+    i.e. fragment ``s``'s delta is cut right at the end of its own
+    offset window, its reduce is dispatched immediately, and the
+    resulting outer update lands one segment *later* — while segment
+    ``s+1``'s inner compute runs, which is the communication/compute
+    overlap the mesh step exploits.  The final fragment applies at the
+    phase boundary.  Applies touch only their own fragment's leaves,
+    so the one-segment delay never perturbs another fragment's delta.
+    With ``K == 1`` this is exactly classic burst DiLoCo
+    (:func:`outer_step` preceded by the full inner loop).
+
+    ``residuals`` is a ``{leaf_idx: (W, ...) fp32}`` error-feedback
+    carry (``None`` or ``{}`` on the first phase); quantization is
+    per worker row (:func:`rowwise_quantize_with_feedback`).
+
+    Returns ``(worker_params, global_params, frag_states, residuals)``.
+    """
+    K = spec.num_fragments
+    ax_list = leaf_axes_list(global_params, axes)
+    g_leaves = list(spec.flatten(global_params))
+    w_leaves = list(spec.flatten(worker_params))
+    new_states = [dict(st) for st in frag_states]
+    new_resid = dict(residuals or {})
+    delta_fn = make_fragment_delta_fn(comm_dtype)
+    apply_fn = make_fragment_apply_fn(lr=lr, momentum=momentum,
+                                      nesterov=nesterov)
+
+    def _apply(f, og_f):
+        state_f = {i: new_states[f][i] for i in og_f}
+        g_f = {i: g_leaves[i] for i in og_f}
+        w_f = {i: w_leaves[i] for i in og_f}
+        new_g, new_s, new_w = apply_fn(og_f, state_f, g_f, w_f)
+        for i in og_f:
+            g_leaves[i] = new_g[i]
+            new_states[f][i] = new_s[i]
+            w_leaves[i] = new_w[i]
+
+    pending = None
+    for s in range(K):
+        worker_params = inner_seg(s, spec.unflatten(w_leaves))
+        w_leaves = list(spec.flatten(worker_params))
+        if pending is not None:
+            _apply(*pending)
+        idx = spec.indices[s]
+        w_f = {i: w_leaves[i] for i in idx}
+        g_f = {i: g_leaves[i] for i in idx}
+        resid = ({i: new_resid[i] for i in idx}
+                 if all(i in new_resid for i in idx) else None)
+        wire, res_out = delta_fn(w_f, g_f, resid)
+        if res_out is not None:
+            new_resid.update(res_out)
+        og = {i: mix_leaf(wire[i], ax_list[i], mix_layers, mix_shared)
+              for i in idx}
+        pending = (s, og)
+    _apply(*pending)
+
+    return (spec.unflatten(w_leaves), spec.unflatten(g_leaves),
+            new_states, new_resid)
 
 
 def fragment_window_outer_gradient(segs, weights, spec, fragment, *,

@@ -43,9 +43,34 @@ def row(tree, i):
 
 @dataclass
 class PhaseMetrics:
+    """Per-phase result every ``Trainer`` backend returns.
+
+    A hybrid: attribute access for the vectorized-trainer consumers
+    (``m.mean_loss``), dict-style access (``m["outer_updates"]``) for
+    the service consumers — backend-specific counters ride in
+    ``extra`` and are reachable by key alongside the dataclass
+    fields."""
     mean_loss: float
-    final_loss: float
-    per_path_loss: np.ndarray
+    final_loss: float = float("nan")
+    per_path_loss: Optional[np.ndarray] = None
+    extra: dict = field(default_factory=dict)
+
+    def __getitem__(self, key):
+        if key in self.extra:
+            return self.extra[key]
+        if key != "extra" and hasattr(self, key):
+            return getattr(self, key)
+        raise KeyError(key)
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def keys(self):
+        return (["mean_loss", "final_loss", "per_path_loss"]
+                + list(self.extra))
 
 
 class DiPaCoTrainer:
@@ -101,6 +126,18 @@ class DiPaCoTrainer:
         # early stopping (paper §2.7)
         self.best_holdout = np.full(W, np.inf)
         self.best_params = None
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def resume(cls, cfg, dcfg, dataset, *, key, ckpt_root, **kw):
+        """Part of the ``Trainer`` protocol.  The in-memory vectorized
+        trainer keeps no durable state to resume from — use the
+        ``"barrier"``/``"service"`` (CheckpointDB) or ``"mesh"``
+        (phase-state file) backends of ``repro.make_trainer`` for
+        kill-and-resume runs."""
+        raise NotImplementedError(
+            "DiPaCoTrainer is in-memory only and cannot resume; use "
+            "make_trainer(..., backend='barrier'|'service'|'mesh')")
 
     # ------------------------------------------------------------------
     def _make_phase(self):

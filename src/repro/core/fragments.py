@@ -116,6 +116,27 @@ def _wire_bytes(n_elems: int, n_leaves: int, comm_dtype: str) -> int:
 
 
 # ---------------------------------------------------------------------
+# segment schedule (Streaming DiLoCo offset windows)
+# ---------------------------------------------------------------------
+
+def segment_bounds(tau: int, num_segments: int) -> list:
+    """Inner-step cut points splitting a phase of ``tau`` steps into
+    ``num_segments`` contiguous segments (the intra-phase fragment
+    boundaries of the mesh streaming schedule).  Remainder steps go to
+    the earliest segments so every segment is non-empty whenever
+    ``tau >= num_segments``."""
+    if tau < num_segments:
+        raise ValueError(
+            f"tau={tau} < num_segments={num_segments}: every fragment "
+            f"needs at least one inner step in its offset window")
+    base, rem = divmod(tau, num_segments)
+    bounds = [0]
+    for s in range(num_segments):
+        bounds.append(bounds[-1] + base + (1 if s < rem else 0))
+    return bounds
+
+
+# ---------------------------------------------------------------------
 # wire quantization (symmetric, per-leaf scale) + error feedback
 # ---------------------------------------------------------------------
 
@@ -141,7 +162,91 @@ def fake_quantize(tree, comm_dtype: str):
         lambda x: _fake_quant_leaf(x, qmax), tree)
 
 
-def quantize_with_feedback(delta, residual, comm_dtype: str):
+# -- real wire payloads (what a transport actually ships) --------------
+#
+# ``encode_wire`` produces the byte-honest device representation of a
+# quantized payload: an int8 ``q`` buffer (two nibbles packed per byte
+# for int4) plus one fp32 scale per leaf.  ``decode_wire`` reconstructs
+# exactly the same fp32 values as :func:`fake_quantize` (bitwise — the
+# q and scale computations are the identical operation sequence), so a
+# transport that ships encoded payloads across a device boundary stays
+# bit-compatible with the in-process simulated path.
+
+def _encode_leaf(x, qmax: int, pack: bool):
+    x = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x)) / qmax
+    q = jnp.clip(jnp.round(x / jnp.where(scale > 0, scale, 1.0)),
+                 -qmax, qmax).astype(jnp.int8)
+    if pack:
+        flat = q.reshape(-1)
+        if flat.shape[0] % 2:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros((1,), jnp.int8)])
+        lo, hi = flat[0::2], flat[1::2]
+        # two's-complement nibbles: [-8, 7] covers qmax=7
+        q = (((hi.astype(jnp.uint8) & 0xF) << 4)
+             | (lo.astype(jnp.uint8) & 0xF)).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def _decode_leaf(payload, qmax: int, pack: bool, shape):
+    q, scale = payload["q"], payload["scale"]
+    if pack:
+        u = q.astype(jnp.uint8)
+        lo = (u & 0xF).astype(jnp.int8)
+        lo = jnp.where(lo > 7, lo - 16, lo)
+        hi = (u >> 4).astype(jnp.int8)
+        hi = jnp.where(hi > 7, hi - 16, hi)
+        n = int(np.prod(shape))
+        flat = jnp.stack([lo, hi], axis=1).reshape(-1)[:n]
+        q = flat.reshape(shape)
+    return jnp.where(scale > 0, q.astype(jnp.float32) * scale,
+                     jnp.zeros(shape, jnp.float32))
+
+
+def encode_wire(tree, comm_dtype: str):
+    """Encode an fp32 payload tree into its on-the-wire representation:
+    the tree with each leaf replaced by ``{"q": int8, "scale": f32[]}``
+    (int4 packs two values per ``q`` byte).  fp32 payloads pass through
+    unchanged (the wire IS the fp32 buffer)."""
+    if comm_dtype == "fp32":
+        return tree
+    if comm_dtype not in _QMAX:
+        raise ValueError(f"comm_dtype {comm_dtype!r} not in {COMM_DTYPES}")
+    qmax, pack = _QMAX[comm_dtype], comm_dtype == "int4"
+    return jax.tree_util.tree_map(
+        lambda x: _encode_leaf(x, qmax, pack), tree)
+
+
+def decode_wire(payload, comm_dtype: str, like):
+    """Reconstruct the fp32 payload from :func:`encode_wire` output.
+    ``like`` supplies leaf shapes (the int4 packing flattens them).
+    ``decode_wire(encode_wire(x)) == fake_quantize(x)`` bitwise."""
+    if comm_dtype == "fp32":
+        return payload
+    qmax, pack = _QMAX[comm_dtype], comm_dtype == "int4"
+    shapes = [jnp.shape(x) for x in jax.tree_util.tree_leaves(like)]
+    leaves, treedef = jax.tree_util.tree_flatten(
+        payload, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+    out = [_decode_leaf(p, qmax, pack, s) for p, s in zip(leaves, shapes)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def payload_nbytes(payload, comm_dtype: str) -> int:
+    """Measured bytes of an encoded payload (``q`` buffers + scales for
+    quantized dtypes, raw fp32 buffers otherwise) — the number a real
+    transport moves, as opposed to the simulated ``_wire_bytes``."""
+    if comm_dtype == "fp32":
+        return sum(int(np.prod(np.shape(x))) * 4
+                   for x in jax.tree_util.tree_leaves(payload))
+    leaves = jax.tree_util.tree_flatten(
+        payload, is_leaf=lambda x: isinstance(x, dict) and "q" in x)[0]
+    return sum(int(np.prod(np.shape(p["q"]))) + _SCALE_BYTES
+               for p in leaves)
+
+
+def quantize_with_feedback(delta, residual, comm_dtype: str, *,
+                           return_payload: bool = False):
     """Encode ``delta`` for the wire with error feedback.
 
     Returns ``(wire, new_residual)``: ``wire`` is the dequantized
@@ -149,14 +254,18 @@ def quantize_with_feedback(delta, residual, comm_dtype: str):
     ``new_residual`` is the quantization error the *sender* keeps and
     adds to its next delta, so the error telescopes across phases
     instead of biasing the outer trajectory.  ``residual=None`` means
-    no carried error (first phase)."""
+    no carried error (first phase).  ``return_payload=True`` appends
+    the :func:`encode_wire` device representation — what a real
+    transport ships; ``decode_wire`` of it equals ``wire`` bitwise."""
     if comm_dtype == "fp32":
-        return delta, None
+        return (delta, None, delta) if return_payload else (delta, None)
     pre = delta if residual is None else jax.tree_util.tree_map(
         lambda d, r: d.astype(jnp.float32) + r, delta, residual)
     wire = fake_quantize(pre, comm_dtype)
     new_residual = jax.tree_util.tree_map(
         lambda p, w: p.astype(jnp.float32) - w, pre, wire)
+    if return_payload:
+        return wire, new_residual, encode_wire(pre, comm_dtype)
     return wire, new_residual
 
 

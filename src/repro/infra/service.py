@@ -50,8 +50,10 @@ from repro.data.sharder import PreShardedDataset
 from repro.models import api
 from repro.models.config import DiPaCoConfig, ModelConfig
 from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.core.dipaco import PhaseMetrics
 from .ckpt_db import CheckpointDB, load_tree
 from .outer_executor import ShardedOuterExecutors
+from .transport import make_transport
 from .task_queue import Task, TaskQueue
 from .worker_pool import Monitor, WorkerPool
 
@@ -112,6 +114,13 @@ class TrainingService:
         # fold order).
         self._comm_dtype = dcfg.comm_dtype
         self._stagger = dcfg.fragment_stagger
+        # delta transport: "inproc" passes the wire tree by reference,
+        # "mesh" ships the encoded payload across a device boundary
+        # (infra/transport.py) — fold values are bit-identical either
+        # way, so resume replay (which bypasses the transport) works
+        # across backends
+        self.transport = make_transport(dcfg.transport,
+                                        comm_dtype=dcfg.comm_dtype)
         self._pending: dict = {i: [] for i in range(W)}   # s -> [(ph, f)]
         self._pending_payload: dict = {}                  # (s, ph) -> wire
         self._pending_count: dict = {}                    # (s, ph) -> refs
@@ -257,13 +266,18 @@ class TrainingService:
             # as an error-feedback residual added to the next phase's
             # delta.  The *wire* payload is what persists and what the
             # executors fold — the resume replay is therefore exact.
-            wire = delta
+            wire, payload = delta, delta
             if self._comm_dtype != "fp32":
-                wire, resid = quantize_with_feedback(
-                    delta, self._qresid[shard], self._comm_dtype)
+                wire, resid, payload = quantize_with_feedback(
+                    delta, self._qresid[shard], self._comm_dtype,
+                    return_payload=True)
                 self._qresid[shard] = resid
                 self.db.write(resid, path_id=shard, phase=t,
                               step=start_step + tau, kind="qres")
+            # the transport hop: inproc returns ``wire`` by reference,
+            # mesh ships the encoded ``payload`` across a device
+            # boundary and decodes it back to the same bits
+            wire = self.transport.ship(shard, wire, payload)
             # the artifacts the paper ships via GFS: the delta (consumed
             # online by executors + the resume replay) and the inner
             # optimizer state (resume only)
@@ -436,12 +450,13 @@ class TrainingService:
                 "monitor_restarts": self.monitor.restarts,
                 "max_observed_lag": self.max_observed_lag,
                 "comm": dict(self.comm_stats),
+                "transport": dict(self.transport.stats),
                 "queue": self.queue.stats()}
 
     # ------------------------------------------------------------------
     def run_phase(self, tau: int | None = None, *,
                   sample_paths: int | None = None,
-                  seed: int | None = None) -> dict:
+                  seed: int | None = None) -> PhaseMetrics:
         """One synchronous outer phase on the persistent pool — the
         legacy barrier API (kept bit-compatible for the equivalence
         oracle).  sample_paths: paper §2.6.2 — train only a random
@@ -477,15 +492,19 @@ class TrainingService:
                 self._clock_cv.wait(timeout=0.1)
         with self._commit_lock:
             self._flush_all_locked()   # barrier: no fragment in flight
-        mean_loss = float(np.mean(
-            [self.losses[(self.phase, s)] for s in active]))
+        per_path = np.asarray(
+            [self.losses[(self.phase, s)] for s in active])
+        mean_loss = float(per_path.mean())
         self.step += tau
         self.phase += 1
-        return {"mean_loss": mean_loss,
-                "outer_updates": self.execs.total_updates,
-                "preemptions": self.pool.preemptions,
-                "active_paths": active,
-                "queue": self.queue.stats()}
+        return PhaseMetrics(
+            mean_loss=mean_loss, final_loss=mean_loss,
+            per_path_loss=per_path,
+            extra={"outer_updates": self.execs.total_updates,
+                   "preemptions": self.pool.preemptions,
+                   "active_paths": active,
+                   "transport": dict(self.transport.stats),
+                   "queue": self.queue.stats()})
 
     # ------------------------------------------------------------------
     def path_params(self, path_id: int):

@@ -86,9 +86,20 @@ class InfraDiPaCoTrainer:
     def step(self):
         return self.service.step
 
+    @classmethod
+    def resume(cls, cfg, dcfg, dataset, *, key, ckpt_root, **kw):
+        """Reconstruct a killed barrier trainer from its checkpoint
+        root — ``TrainingService.resume`` pinned to ``max_phase_lag=0``
+        (the ``Trainer`` protocol's resume signature)."""
+        self = cls.__new__(cls)
+        self.service = TrainingService.resume(
+            cfg, dcfg, dataset, key=key, ckpt_root=ckpt_root,
+            max_phase_lag=0, **kw)
+        return self
+
     def run_phase(self, tau: int | None = None, *,
                   sample_paths: int | None = None,
-                  seed: int | None = None) -> dict:
+                  seed: int | None = None):
         return self.service.run_phase(tau, sample_paths=sample_paths,
                                       seed=seed)
 

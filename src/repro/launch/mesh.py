@@ -12,10 +12,29 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_debug_mesh(num_devices: int | None = None, model: int = 2):
-    """Small mesh for in-process tests (host platform devices)."""
+    """Small mesh for in-process tests (host platform devices).
+
+    ``model`` is clamped to the available device count: on a 1-device
+    host the old ``(1, 2)`` shape demanded 2 devices and crashed."""
     n = num_devices or len(jax.devices())
+    model = max(1, min(model, n))
     data = max(1, n // model)
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_worker_mesh(num_workers: int):
+    """1-D worker mesh for the streaming mesh trainer: as many devices
+    on the "data" axis as evenly divide the worker count (their gcd),
+    so a (W, ...) stacked tree always shards cleanly; "model" stays 1.
+    On a 1-device host this is a (1, 1) mesh — same code path, zero
+    collectives crossing a device boundary."""
+    import math
+
+    import numpy as np
+
+    n = math.gcd(int(num_workers), len(jax.devices()))
+    devs = np.asarray(jax.devices()[:n]).reshape(n, 1)
+    return jax.sharding.Mesh(devs, ("data", "model"))
 
 
 def worker_axes(mesh) -> tuple:

@@ -26,8 +26,9 @@ from repro.configs import get_smoke_config
 from repro.data import SyntheticCorpus
 from repro.models import api
 from repro.models.config import DiPaCoConfig
-from repro.serving import (ContinuousBatchingEngine, PathServingEngine,
-                           poisson_trace, prefix_hash_router)
+from repro.serving import (ContinuousBatchingEngine, EngineOptions,
+                           PathServingEngine, poisson_trace,
+                           prefix_hash_router)
 
 
 def main() -> None:
@@ -86,12 +87,13 @@ def main() -> None:
         paths = [api.init_model(jax.random.fold_in(key, p), cfg)[0]
                  for p in range(num_paths)]
 
+    # one validated options bag configures either engine
+    opts = EngineOptions(registry=registry, swap_policy=args.swap_policy,
+                         cache_len=cache_len, slots_per_path=args.slots,
+                         reroute_every=args.reroute_every,
+                         route_fn=prefix_hash_router(num_paths))
     if engine_kind == "continuous":
-        engine = ContinuousBatchingEngine(
-            cfg, paths, registry=registry, swap_policy=args.swap_policy,
-            cache_len=cache_len, slots_per_path=args.slots,
-            reroute_every=args.reroute_every,
-            route_fn=prefix_hash_router(num_paths))
+        engine = ContinuousBatchingEngine(cfg, paths, options=opts)
         trace = poisson_trace(args.requests, rate=args.rate,
                               prompt_lens=[args.prompt_len],
                               max_new=args.max_new,
@@ -115,8 +117,8 @@ def main() -> None:
         print(f"[serve] request->path: "
               f"{[f.path for f in sorted(fins, key=lambda f: f.rid)]}")
         return
-    engine = PathServingEngine(cfg, paths, registry=registry,
-                               cache_len=cache_len)
+    engine = PathServingEngine(cfg, paths, options=EngineOptions(
+        registry=registry, cache_len=cache_len))
     t0 = time.time()
     res = engine.generate(prompts, max_new=args.max_new,
                           reroute_every=args.reroute_every)

@@ -77,6 +77,15 @@ def replicated(mesh: Mesh):
     return NamedSharding(mesh, PartitionSpec())
 
 
+def worker_stacked_sharding(mesh: Mesh):
+    """NamedSharding for worker-stacked (W, ...) leaves: the leading
+    worker axis over the mesh's worker axes, everything else
+    replicated — the layout the streaming mesh outer step's collectives
+    (launch/steps.py) assume."""
+    cand = ("pod", "data") if "pod" in mesh.shape else "data"
+    return NamedSharding(mesh, PartitionSpec(cand))
+
+
 def batch_sharding(mesh: Mesh, ndim: int, *, batch_dim: int = 0):
     parts = [None] * ndim
     cand = ("pod", "data") if "pod" in mesh.shape else ("data",)

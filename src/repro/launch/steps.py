@@ -121,6 +121,171 @@ def make_outer_step(cfg: ModelConfig, axes, *, lr=0.7, momentum=0.9,
 
 
 # ---------------------------------------------------------------------------
+# Streaming mesh outer step (real collectives over the worker axes)
+# ---------------------------------------------------------------------------
+#
+# The PR-5 fragment schedule, lowered onto an actual device mesh:
+# the phase is split into K scan segments (core.fragments.segment_bounds);
+# at the end of segment s fragment s's delta is cut, per-row quantized,
+# and its reduce DISPATCHED — seg(s+1)'s inner compute is enqueued right
+# behind it with no data dependency, so the runtime overlaps the
+# fragment all-reduce with the next segment's compute.  The update lands
+# one segment later (applies touch only their own fragment's leaves).
+#
+# Bit-exactness strategy vs the single-process oracle
+# (core.diloco.segmented_streaming_phase): the reduce all_gathers the
+# full (W, ...) wire leaf over the worker axes and evaluates the SAME
+# full mixing einsum (core.diloco.mix_leaf) on every device, then slices
+# its local rows — no psum, whose reduction order would differ from the
+# einsum's.  Quantization is per worker row on both sides
+# (core.diloco.rowwise_quantize_with_feedback), so row scales never
+# depend on how rows are sharded.
+
+def worker_partition_spec(mesh):
+    """PartitionSpec sharding a leading worker axis over the mesh's
+    worker axes (everything else replicated)."""
+    from jax.sharding import PartitionSpec
+    from repro.launch.mesh import worker_axes
+    waxes = worker_axes(mesh)
+    return PartitionSpec(waxes if len(waxes) > 1 else waxes[0])
+
+
+def make_fragment_reduce_step(mesh, ax_list):
+    """shard_map fragment all-reduce: ``(wire_f, mix_layers, mix_shared)
+    -> og_f`` with every leaf all_gathered over ``worker_axes(mesh)``,
+    mixed with the full einsum each device evaluates identically, and
+    sliced back to the local rows.  ``ax_list`` is the flatten-order
+    logical-axes list (core.diloco.leaf_axes_list)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+    from repro.core.diloco import mix_leaf
+    from repro.launch.mesh import worker_axes
+
+    waxes = worker_axes(mesh)
+    wspec = worker_partition_spec(mesh)
+    nshards = 1
+    for a in waxes:
+        nshards *= mesh.shape[a]
+
+    def _shard_index():
+        idx = 0
+        for a in waxes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    def _local(wire_f, mixl, mixs):
+        def one(i, x):
+            full = jax.lax.all_gather(x, waxes, axis=0, tiled=True)
+            og = mix_leaf(full, ax_list[i], mixl, mixs)
+            wl = x.shape[0]
+            return jax.lax.dynamic_slice_in_dim(
+                og, _shard_index() * wl, wl, axis=0)
+
+        return {i: one(i, x) for i, x in wire_f.items()}
+
+    fn = shard_map(_local, mesh=mesh,
+                   in_specs=(wspec, PartitionSpec(), PartitionSpec()),
+                   out_specs=wspec, check_rep=False)
+    return jax.jit(fn)
+
+
+def make_segment_scan_fn(cfg: ModelConfig):
+    """jitted inner-segment runner ``(worker_params, opt_state, batches,
+    lrs) -> (worker_params, opt_state, losses)``; ``batches`` is a
+    (S, W, B, T) token array, one scan iteration per inner step."""
+    inner = make_inner_train_step(cfg)
+
+    def seg(worker_params, opt_state, batches, lrs):
+        def body(carry, inp):
+            wp, opt = carry
+            batch, lr = inp
+            wp, opt, metrics = inner(wp, opt, {"tokens": batch}, lr)
+            return (wp, opt), metrics["loss"]
+
+        (wp, opt), losses = jax.lax.scan(
+            body, (worker_params, opt_state), (batches, lrs))
+        return wp, opt, losses
+
+    donate = () if jax.default_backend() == "cpu" else (0, 1)
+    return jax.jit(seg, donate_argnums=donate)
+
+
+def make_streaming_mesh_phase(cfg: ModelConfig, mesh, axes, fragspec, *,
+                              comm_dtype: str = "fp32", outer_lr=0.7,
+                              outer_momentum=0.9, outer_nesterov=True):
+    """Build the overlapped streaming phase runner.
+
+    Returns ``phase(worker_params, opt_state, global_params,
+    frag_states, residuals, mix_layers, mix_shared, seg_batches,
+    seg_lrs) -> (worker_params, opt_state, global_params, frag_states,
+    residuals, losses)`` where ``seg_batches[s]``/``seg_lrs[s]`` hold
+    segment ``s``'s inner-step inputs.  The dispatch order per segment
+    is ``seg(s) -> apply(s-1) -> delta(s) -> reduce(s)``: reduce(s) is
+    in flight while seg(s+1) computes.  Bit-exact to
+    ``core.diloco.segmented_streaming_phase`` driven by the same
+    jitted segment fn (regression-tested in tests/test_mesh_steps.py).
+    With ``fragspec.num_fragments == 1`` this is classic burst DiLoCo
+    through the same code path — the benchmark's baseline lane.
+    """
+    from repro.core.diloco import (leaf_axes_list, make_fragment_apply_fn,
+                                   make_fragment_delta_fn)
+
+    shapes, _ = model_param_shapes(cfg)
+    ax_list = leaf_axes_list(shapes, axes)
+    seg_fn = make_segment_scan_fn(cfg)
+    delta_fn = make_fragment_delta_fn(comm_dtype)
+    reduce_fn = make_fragment_reduce_step(mesh, ax_list)
+    apply_fn = make_fragment_apply_fn(
+        lr=outer_lr, momentum=outer_momentum, nesterov=outer_nesterov)
+    K = fragspec.num_fragments
+
+    def _apply(pending, g_leaves, states, w_leaves):
+        f, og = pending
+        state_f = {i: states[f][i] for i in og}
+        g_f = {i: g_leaves[i] for i in og}
+        w_f = {i: w_leaves[i] for i in og}
+        new_g, new_s, new_w = apply_fn(og, state_f, g_f, w_f)
+        for i in og:
+            g_leaves[i] = new_g[i]
+            states[f][i] = new_s[i]
+            w_leaves[i] = new_w[i]
+
+    def phase(worker_params, opt_state, global_params, frag_states,
+              residuals, mix_layers, mix_shared, seg_batches, seg_lrs):
+        g_leaves = list(fragspec.flatten(global_params))
+        states = [dict(s) for s in frag_states]
+        resid = dict(residuals or {})
+        losses = []
+        pending = None
+        wp, opt = worker_params, opt_state
+        for s in range(K):
+            wp, opt, seg_losses = seg_fn(wp, opt, seg_batches[s],
+                                         seg_lrs[s])
+            losses.append(seg_losses)
+            w_leaves = list(fragspec.flatten(wp))
+            if pending is not None:
+                _apply(pending, g_leaves, states, w_leaves)
+                wp = fragspec.unflatten(w_leaves)
+            idx = fragspec.indices[s]
+            w_f = {i: w_leaves[i] for i in idx}
+            g_f = {i: g_leaves[i] for i in idx}
+            r_f = ({i: resid[i] for i in idx}
+                   if all(i in resid for i in idx) else None)
+            wire, new_r = delta_fn(w_f, g_f, r_f)
+            if new_r is not None:
+                resid.update(new_r)
+            og = reduce_fn(wire, mix_layers, mix_shared)
+            pending = (s, og)
+        w_leaves = list(fragspec.flatten(wp))
+        _apply(pending, g_leaves, states, w_leaves)
+        wp = fragspec.unflatten(w_leaves)
+        return (wp, opt, fragspec.unflatten(g_leaves), states, resid,
+                jnp.concatenate(losses, axis=0))
+
+    return phase
+
+
+# ---------------------------------------------------------------------------
 # Serving steps
 # ---------------------------------------------------------------------------
 def make_prefill_step(cfg: ModelConfig):

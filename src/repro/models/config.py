@@ -154,6 +154,12 @@ class DiPaCoConfig:
     outer_fragments: int = 1
     fragment_stagger: int = 0
     comm_dtype: str = "fp32"
+    # delta transport backend (infra/transport.py): "inproc" hands the
+    # dequantized wire tree straight to the executors (simulated byte
+    # accounting only); "mesh" ships the *encoded* payload across a
+    # device boundary with jax.device_put and decodes on the executor's
+    # device — bit-identical fold values, real measured bytes.
+    transport: str = "inproc"
 
     @property
     def num_paths(self) -> int:

@@ -1,5 +1,6 @@
 from .cache import SlotArena, SlotExhausted, StackedSlotArenas
-from .engine import (ContinuousBatchingEngine, FinishedRequest,
-                     GenerationResult, PathServingEngine)
+from .engine import (ContinuousBatchingEngine, EngineOptions,
+                     FinishedRequest, GenerationResult,
+                     PathServingEngine)
 from .scheduler import (Request, Scheduler, poisson_trace,
                         prefix_hash_router)

@@ -40,8 +40,9 @@ per-request pinning policy is chosen at construction:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
-from typing import Dict, List, Optional
+import warnings
+from dataclasses import dataclass, fields
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +82,89 @@ def _default_buckets(cache_len: int):
 
 
 @dataclass
+class EngineOptions:
+    """Construction options shared by both serving engines.
+
+    One validated bag replaces the loose ``registry=`` / ``swap_policy=``
+    / bucket kwargs that were duplicated across
+    :class:`PathServingEngine`, :class:`ContinuousBatchingEngine` and
+    ``launch/serve.py``::
+
+        opts = EngineOptions(registry=reg, swap_policy="live",
+                             cache_len=256, slots_per_path=4)
+        eng = ContinuousBatchingEngine(cfg, options=opts)
+
+    The continuous-batching-only fields (``slots_per_path`` onward) are
+    accepted and ignored by the one-shot engine, so one options object
+    can configure either engine.  Passing the old per-kwarg form still
+    works for this release but emits a :class:`DeprecationWarning`.
+    """
+
+    router: Any = None
+    route_fn: Any = None
+    feat_params: Any = None
+    registry: Any = None
+    cache_len: int = 512
+    swap_policy: str = "drain"
+    # --- ContinuousBatchingEngine only ---------------------------------
+    slots_per_path: int = 8
+    reroute_every: int = 0
+    stacked: Optional[bool] = None
+    bucketed_prefill: Optional[bool] = None
+    prefill_buckets: Optional[tuple] = None
+
+    def __post_init__(self):
+        if self.router is not None and self.route_fn is not None:
+            raise ValueError("pass either router (feature-based) or "
+                             "route_fn (prompt -> path id), not both")
+        if self.swap_policy not in ("drain", "live"):
+            raise ValueError(f"swap_policy must be 'drain' or 'live', "
+                             f"got {self.swap_policy!r}")
+        if self.cache_len < 1:
+            raise ValueError(f"cache_len must be >= 1, "
+                             f"got {self.cache_len}")
+        if self.slots_per_path < 1:
+            raise ValueError(f"slots_per_path must be >= 1, "
+                             f"got {self.slots_per_path}")
+        if self.reroute_every < 0:
+            raise ValueError(f"reroute_every must be >= 0, "
+                             f"got {self.reroute_every}")
+        if self.prefill_buckets is not None:
+            self.prefill_buckets = tuple(self.prefill_buckets)
+            if any(b > self.cache_len or b < 1
+                   for b in self.prefill_buckets):
+                raise ValueError(
+                    f"prefill_buckets {self.prefill_buckets} must lie "
+                    f"in [1, cache_len={self.cache_len}]")
+
+
+def _resolve_options(options, legacy, allowed):
+    """Fold legacy per-kwarg engine construction into an EngineOptions.
+
+    Deprecation shim for one release: explicit old-style kwargs still
+    work (with a warning) but cannot be mixed with ``options=``.
+    """
+    unknown = sorted(set(legacy) - set(allowed))
+    if unknown:
+        raise TypeError(f"unknown engine option(s): {unknown}; "
+                        f"valid: {sorted(allowed)}")
+    used = {k: v for k, v in legacy.items() if v is not None}
+    if options is not None:
+        if used:
+            raise ValueError(
+                f"pass options=EngineOptions(...) or the legacy kwargs "
+                f"{sorted(used)} — not both")
+        return options
+    if used:
+        warnings.warn(
+            "constructing a serving engine from loose keyword arguments "
+            "is deprecated; pass options=EngineOptions(...) instead "
+            "(the per-kwarg form is removed next release)",
+            DeprecationWarning, stacklevel=3)
+    return EngineOptions(**used)
+
+
+@dataclass
 class GenerationResult:
     tokens: np.ndarray          # (B, prompt + new)
     paths: np.ndarray           # (B,) final path per request
@@ -113,40 +197,39 @@ class FinishedRequest:
 class _EngineBase:
     """Shared routing / feature / registry plumbing."""
 
+    # legacy kwargs the deprecation shim still accepts on this class
+    _OPTION_KEYS = ("router", "route_fn", "feat_params", "registry",
+                    "cache_len", "swap_policy")
+
     def __init__(self, cfg: ModelConfig, path_params_list=None, *,
-                 router=None, feat_params=None, cache_len: int = 512,
-                 registry=None, swap_policy: str = "drain",
-                 route_fn=None):
+                 options: Optional[EngineOptions] = None, **legacy):
         self.cfg = cfg
-        if router is not None and route_fn is not None:
-            raise ValueError("pass either router (feature-based) or "
-                             "route_fn (prompt -> path id), not both")
-        if registry is not None:
+        opts = _resolve_options(options, legacy,
+                                type(self)._OPTION_KEYS)
+        self.options = opts
+        if opts.registry is not None:
             if path_params_list is not None:
                 raise ValueError(
                     "pass either path_params_list or registry, not both")
-            self._version, path_params_list = registry.serving()
+            self._version, path_params_list = opts.registry.serving()
         elif path_params_list is None:
             raise ValueError("either path_params_list or a registry "
                              "handle is required")
         else:
             self._version = -1
-        if swap_policy not in ("drain", "live"):
-            raise ValueError(f"swap_policy must be 'drain' or 'live', "
-                             f"got {swap_policy!r}")
-        self.registry = registry
-        self.swap_policy = swap_policy
+        self.registry = opts.registry
+        self.swap_policy = opts.swap_policy
         self.paths = path_params_list
-        self.router = router
-        self.route_fn = route_fn
-        self.feat_params = feat_params
-        self.cache_len = cache_len
+        self.router = opts.router
+        self.route_fn = opts.route_fn
+        self.feat_params = opts.feat_params
+        self.cache_len = opts.cache_len
 
         cfg_ = cfg
         # bind only the feature params, not the whole path list: the
         # closure must not pin a superseded version's full parameter
         # set in memory after a hot swap
-        feat_src = feat_params if feat_params is not None \
+        feat_src = opts.feat_params if opts.feat_params is not None \
             else path_params_list[0]
 
         @jax.jit
@@ -177,13 +260,9 @@ class PathServingEngine(_EngineBase):
     """One-shot batch engine (baseline): synchronous generate per batch."""
 
     def __init__(self, cfg: ModelConfig, path_params_list=None, *,
-                 router=None, feat_params=None, cache_len: int = 512,
-                 registry=None, swap_policy: str = "drain",
-                 route_fn=None):
-        super().__init__(cfg, path_params_list, router=router,
-                         feat_params=feat_params, cache_len=cache_len,
-                         registry=registry, swap_policy=swap_policy,
-                         route_fn=route_fn)
+                 options: Optional[EngineOptions] = None, **legacy):
+        super().__init__(cfg, path_params_list, options=options,
+                         **legacy)
         cfg_ = cfg
 
         def _decode(params, tok, cache, idx):
@@ -296,24 +375,24 @@ class ContinuousBatchingEngine(_EngineBase):
     would absorb pad tokens).
     """
 
+    # the continuous engine accepts every EngineOptions field as a
+    # legacy kwarg (the base only its shared subset)
+    _OPTION_KEYS = tuple(f.name for f in fields(EngineOptions))
+
     def __init__(self, cfg: ModelConfig, path_params_list=None, *,
-                 router=None, feat_params=None, cache_len: int = 512,
-                 slots_per_path: int = 8, reroute_every: int = 0,
-                 stacked: Optional[bool] = None,
-                 bucketed_prefill: Optional[bool] = None,
-                 prefill_buckets=None, registry=None,
-                 swap_policy: str = "drain", route_fn=None):
-        super().__init__(cfg, path_params_list, router=router,
-                         feat_params=feat_params, cache_len=cache_len,
-                         registry=registry, swap_policy=swap_policy,
-                         route_fn=route_fn)
+                 options: Optional[EngineOptions] = None, **legacy):
+        super().__init__(cfg, path_params_list, options=options,
+                         **legacy)
+        opts = self.options               # resolved by the base
         path_params_list = self.paths     # resolved by the base (registry)
-        self.reroute_every = reroute_every
+        cache_len = self.cache_len
+        slots_per_path = opts.slots_per_path
+        self.reroute_every = opts.reroute_every
         self.swaps = 0
         self.last_swap_tick = -1
         num_paths = len(path_params_list)
         homog = _paths_homogeneous(path_params_list)
-        self.stacked = homog if stacked is None else stacked
+        self.stacked = homog if opts.stacked is None else opts.stacked
         if self.stacked and not homog:
             raise ValueError("stacked decode requires homogeneous path "
                              "architectures; pass stacked=False")
@@ -321,16 +400,14 @@ class ContinuousBatchingEngine(_EngineBase):
         # recurrent SSM state (or enc-dec replay) would absorb them
         can_bucket = (not api.is_encdec(cfg)
                       and all(spec.mixer == "attn" for spec in cfg.pattern))
-        self.bucketed = can_bucket if bucketed_prefill is None \
-            else bucketed_prefill
+        self.bucketed = can_bucket if opts.bucketed_prefill is None \
+            else opts.bucketed_prefill
         if self.bucketed and not can_bucket:
             raise ValueError("bucketed prefill requires attention-only "
                              "patterns; pass bucketed_prefill=False")
-        buckets = (tuple(prefill_buckets) if prefill_buckets is not None
+        buckets = (opts.prefill_buckets
+                   if opts.prefill_buckets is not None
                    else _default_buckets(cache_len))
-        if any(b > cache_len or b < 1 for b in buckets):
-            raise ValueError(f"prefill_buckets {buckets} must lie in "
-                             f"[1, cache_len={cache_len}]")
         # cache_len is always a bucket so every admissible sequence
         # (submit enforces prompt+max_new <= cache_len) — including
         # §2.4.3 migration re-prefills of the running text — hits the

@@ -1,0 +1,99 @@
+"""Unified trainer API: one protocol, one factory, four backends.
+
+Every trainer backend exposes the same surface —
+
+ * ``run_phase(tau=None, ...) -> PhaseMetrics``
+ * ``path_params(path_id)``
+ * ``resume(cfg, dcfg, dataset, *, key, ckpt_root, **kw)`` classmethod
+
+— so launchers, examples and tests construct trainers through
+``make_trainer`` instead of hand-wiring each backend's constructor:
+
+    tr = repro.make_trainer(cfg, dcfg, dataset, backend="mesh",
+                            key=key, batch_size=4)
+
+Backends:
+
+``"vector"``   core.dipaco.DiPaCoTrainer — in-memory stacked-worker
+               simulation (Algorithm 1); no durable state.
+``"barrier"``  infra.trainer.InfraDiPaCoTrainer — the round-based §3
+               infrastructure pinned to a global barrier
+               (max_phase_lag=0); CheckpointDB resume.
+``"service"``  infra.service.TrainingService — asynchronous
+               phase-pipelined service with staleness window, fragment
+               streaming and delta transports; CheckpointDB resume.
+``"mesh"``     launch.train.MeshStreamingTrainer — the streaming
+               fragment schedule through real shard_map collectives on
+               a device mesh, overlapped with inner compute;
+               phase-state-file resume.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+from repro.core.dipaco import PhaseMetrics
+
+BACKENDS = ("vector", "barrier", "service", "mesh")
+
+
+@runtime_checkable
+class Trainer(Protocol):
+    """The surface all four backends share."""
+
+    def run_phase(self, tau=None, **kw) -> PhaseMetrics:
+        ...
+
+    def path_params(self, path_id: int):
+        ...
+
+    @classmethod
+    def resume(cls, cfg, dcfg, dataset, *, key, ckpt_root, **kw):
+        ...
+
+
+def trainer_class(backend: str):
+    if backend == "vector":
+        from repro.core.dipaco import DiPaCoTrainer
+        return DiPaCoTrainer
+    if backend == "barrier":
+        from repro.infra.trainer import InfraDiPaCoTrainer
+        return InfraDiPaCoTrainer
+    if backend == "service":
+        from repro.infra.service import TrainingService
+        return TrainingService
+    if backend == "mesh":
+        from repro.launch.train import MeshStreamingTrainer
+        return MeshStreamingTrainer
+    raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+
+
+def make_trainer(cfg, dcfg, dataset, *, backend: str = "vector", key,
+                 ckpt_root: str | None = None, resume: bool = False,
+                 **kw) -> Trainer:
+    """Construct (or resume) a trainer backend.
+
+    ``ckpt_root`` is required for the DB-backed backends ("barrier",
+    "service"), optional for "mesh" (enables phase checkpointing) and
+    rejected for "vector".  Remaining kwargs go to the backend
+    constructor (batch_size, peak_lr, warmup, total_steps, seed, and
+    backend-specific ones like num_workers / max_phase_lag / mesh).
+    """
+    cls = trainer_class(backend)
+    if backend == "vector":
+        if ckpt_root is not None:
+            raise ValueError("backend='vector' is in-memory only and "
+                             "takes no ckpt_root")
+        if resume:
+            return cls.resume(cfg, dcfg, dataset, key=key,
+                              ckpt_root=None, **kw)   # raises, on purpose
+        return cls(cfg, dcfg, dataset, key=key, **kw)
+    if backend in ("barrier", "service") and ckpt_root is None:
+        raise ValueError(f"backend={backend!r} persists to a "
+                         "CheckpointDB: pass ckpt_root=")
+    if resume:
+        return cls.resume(cfg, dcfg, dataset, key=key,
+                          ckpt_root=ckpt_root, **kw)
+    if backend == "mesh":
+        return cls(cfg, dcfg, dataset, key=key, ckpt_root=ckpt_root,
+                   **kw)
+    return cls(cfg, dcfg, dataset, key=key, ckpt_root=ckpt_root, **kw)
