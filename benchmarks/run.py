@@ -26,10 +26,12 @@ def _derived(row: dict) -> str:
 
 # fast, CI-friendly subset exercising the kernel layer, the shared
 # training harness (common.setup), the serving subsystem, the decode
-# hot path, the async training service (async-vs-barrier) and the
-# deployment plane (publish/canary/hot-swap)
+# hot path, the async training service (async-vs-barrier), the
+# deployment plane (publish/canary/hot-swap) and the elastic-fleet
+# chaos gate (30% mid-phase worker loss must stay within 2% of the
+# stable fleet's loss — asserted inside the suite)
 SMOKE_SUITES = ("kernels", "table2", "serving", "decode", "outer_exec",
-                "deploy")
+                "deploy", "fleet")
 
 # suites whose metrics must additionally be non-zero under --smoke (a
 # zero decode latency / wall-clock / observed-lag / staleness means the
@@ -64,11 +66,12 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (decode_step_latency, deploy_latency, fig8_convergence,
-                   fig9_path_scaling, fig11_alternating, kernels_micro,
-                   outer_exec_scaling, roofline, serving_throughput,
-                   sync_vs_diloco, table1_variants, table2_flatmoe_overfit,
-                   table3_eval_routing, table5_sharding)
+    from . import (decode_step_latency, deploy_latency, elastic_fleet,
+                   fig8_convergence, fig9_path_scaling, fig11_alternating,
+                   kernels_micro, outer_exec_scaling, roofline,
+                   serving_throughput, sync_vs_diloco, table1_variants,
+                   table2_flatmoe_overfit, table3_eval_routing,
+                   table5_sharding)
     suites = {
         "table1": table1_variants,
         "table2": table2_flatmoe_overfit,
@@ -79,6 +82,7 @@ def main() -> None:
         "fig11": fig11_alternating,
         "sync_vs_diloco": sync_vs_diloco,
         "outer_exec": outer_exec_scaling,
+        "fleet": elastic_fleet,
         "kernels": kernels_micro,
         "roofline": roofline,
         "serving": serving_throughput,

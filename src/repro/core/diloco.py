@@ -300,6 +300,18 @@ def fragment_window_outer_gradient(segs, weights, spec, fragment, *,
     return {i: a * scale for i, a in acc.items()}
 
 
+def quorum_size(frac: float, n_active: int) -> int:
+    """Elastic quorum oracle: contributors required to fire a window
+    when ``n_active`` workers are live.  ``ceil(frac * n_active)``,
+    floored at 1 so a window can always fire (an empty fleet still
+    admits lagged stragglers, weighted by :func:`window_outer_gradient`
+    exactly like any shrunk quorum).  The single source the executors
+    re-evaluate on every membership change — shrinking the fleet
+    mid-window can only lower the bar, never strand an already-filled
+    window."""
+    return max(1, math.ceil(frac * max(int(n_active), 1)))
+
+
 def window_outer_gradient(segs, weights, *, rescale=True):
     """Lag-aware executor-window equivalence oracle (§3.3 async).
 

@@ -26,6 +26,8 @@ momentum all fragment identically.
 """
 from __future__ import annotations
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -61,6 +63,7 @@ class FragmentSpec:
         self.num_leaves = len(leaves)
         self.num_fragments = max(1, min(int(num_fragments), self.num_leaves))
         sizes = [int(np.prod(np.shape(x))) for x in leaves]
+        self.leaf_sizes = list(sizes)
         order = sorted(range(self.num_leaves),
                        key=lambda i: (-sizes[i], i))
         self.assign = np.zeros(self.num_leaves, np.int32)
@@ -93,14 +96,39 @@ class FragmentSpec:
         leaves = self.flatten(tree)
         return {i: leaves[i] for i in self.indices[fragment]}
 
-    def wire_bytes(self, fragment: int, comm_dtype: str = "fp32") -> int:
-        """Simulated bytes to ship this fragment's outer delta."""
-        return _wire_bytes(self.elems[fragment],
-                           len(self.indices[fragment]), comm_dtype)
+    def wire_bytes(self, fragment: int, comm_dtype="fp32") -> int:
+        """Simulated bytes to ship this fragment's outer delta.
+        ``comm_dtype`` is one dtype name for the whole fragment, or a
+        per-leaf dtype list aligned with the template's flatten order
+        (:func:`leaf_comm_dtypes`)."""
+        if isinstance(comm_dtype, str):
+            return _wire_bytes(self.elems[fragment],
+                               len(self.indices[fragment]), comm_dtype)
+        dts = _leaf_dtype_list(comm_dtype, self.num_leaves)
+        return int(sum(_wire_bytes(self.leaf_sizes[i], 1, dts[i])
+                       for i in self.indices[fragment]))
 
-    def total_bytes(self, comm_dtype: str = "fp32") -> int:
+    def total_bytes(self, comm_dtype="fp32") -> int:
         return sum(self.wire_bytes(f, comm_dtype)
                    for f in range(self.num_fragments))
+
+
+def _leaf_dtype_list(comm_dtype, num_leaves: int) -> list:
+    """Normalize a ``str | per-leaf sequence`` comm dtype to a validated
+    per-leaf list (flatten order)."""
+    if isinstance(comm_dtype, str):
+        if comm_dtype not in COMM_DTYPES:
+            raise ValueError(
+                f"comm_dtype {comm_dtype!r} not in {COMM_DTYPES}")
+        return [comm_dtype] * num_leaves
+    dts = list(comm_dtype)
+    if len(dts) != num_leaves:
+        raise ValueError(f"per-leaf comm_dtype list has {len(dts)} "
+                         f"entries, tree has {num_leaves} leaves")
+    for d in dts:
+        if d not in COMM_DTYPES:
+            raise ValueError(f"comm_dtype {d!r} not in {COMM_DTYPES}")
+    return dts
 
 
 def _wire_bytes(n_elems: int, n_leaves: int, comm_dtype: str) -> int:
@@ -150,16 +178,25 @@ def _fake_quant_leaf(x, qmax: int):
     return jnp.where(scale > 0, q * scale, jnp.zeros_like(x))
 
 
-def fake_quantize(tree, comm_dtype: str):
+def fake_quantize(tree, comm_dtype):
     """Quantize-dequantize every leaf of ``tree`` — the value the
-    receiver reconstructs from the int wire payload."""
+    receiver reconstructs from the int wire payload.  ``comm_dtype``
+    is one dtype name or a per-leaf list (flatten order); fp32 leaves
+    pass through by reference."""
     if comm_dtype == "fp32":
         return tree
-    if comm_dtype not in _QMAX:
-        raise ValueError(f"comm_dtype {comm_dtype!r} not in {COMM_DTYPES}")
-    qmax = _QMAX[comm_dtype]
-    return jax.tree_util.tree_map(
-        lambda x: _fake_quant_leaf(x, qmax), tree)
+    if isinstance(comm_dtype, str):
+        if comm_dtype not in _QMAX:
+            raise ValueError(
+                f"comm_dtype {comm_dtype!r} not in {COMM_DTYPES}")
+        qmax = _QMAX[comm_dtype]
+        return jax.tree_util.tree_map(
+            lambda x: _fake_quant_leaf(x, qmax), tree)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    dts = _leaf_dtype_list(comm_dtype, len(leaves))
+    out = [x if d == "fp32" else _fake_quant_leaf(x, _QMAX[d])
+           for x, d in zip(leaves, dts)]
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 # -- real wire payloads (what a transport actually ships) --------------
@@ -204,48 +241,70 @@ def _decode_leaf(payload, qmax: int, pack: bool, shape):
                      jnp.zeros(shape, jnp.float32))
 
 
-def encode_wire(tree, comm_dtype: str):
+def encode_wire(tree, comm_dtype):
     """Encode an fp32 payload tree into its on-the-wire representation:
     the tree with each leaf replaced by ``{"q": int8, "scale": f32[]}``
-    (int4 packs two values per ``q`` byte).  fp32 payloads pass through
-    unchanged (the wire IS the fp32 buffer)."""
+    (int4 packs two values per ``q`` byte).  fp32 payloads (or fp32
+    leaves of a per-leaf dtype list) pass through unchanged (the wire
+    IS the fp32 buffer)."""
     if comm_dtype == "fp32":
         return tree
-    if comm_dtype not in _QMAX:
-        raise ValueError(f"comm_dtype {comm_dtype!r} not in {COMM_DTYPES}")
-    qmax, pack = _QMAX[comm_dtype], comm_dtype == "int4"
-    return jax.tree_util.tree_map(
-        lambda x: _encode_leaf(x, qmax, pack), tree)
+    if isinstance(comm_dtype, str):
+        if comm_dtype not in _QMAX:
+            raise ValueError(
+                f"comm_dtype {comm_dtype!r} not in {COMM_DTYPES}")
+        qmax, pack = _QMAX[comm_dtype], comm_dtype == "int4"
+        return jax.tree_util.tree_map(
+            lambda x: _encode_leaf(x, qmax, pack), tree)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    dts = _leaf_dtype_list(comm_dtype, len(leaves))
+    out = [x if d == "fp32"
+           else _encode_leaf(x, _QMAX[d], d == "int4")
+           for x, d in zip(leaves, dts)]
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def decode_wire(payload, comm_dtype: str, like):
+def _is_wire_leaf(x) -> bool:
+    return isinstance(x, dict) and "q" in x
+
+
+def decode_wire(payload, comm_dtype, like):
     """Reconstruct the fp32 payload from :func:`encode_wire` output.
     ``like`` supplies leaf shapes (the int4 packing flattens them).
     ``decode_wire(encode_wire(x)) == fake_quantize(x)`` bitwise."""
     if comm_dtype == "fp32":
         return payload
-    qmax, pack = _QMAX[comm_dtype], comm_dtype == "int4"
     shapes = [jnp.shape(x) for x in jax.tree_util.tree_leaves(like)]
     leaves, treedef = jax.tree_util.tree_flatten(
-        payload, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
-    out = [_decode_leaf(p, qmax, pack, s) for p, s in zip(leaves, shapes)]
+        payload, is_leaf=_is_wire_leaf)
+    if isinstance(comm_dtype, str):
+        qmax, pack = _QMAX[comm_dtype], comm_dtype == "int4"
+        out = [_decode_leaf(p, qmax, pack, s)
+               for p, s in zip(leaves, shapes)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+    dts = _leaf_dtype_list(comm_dtype, len(leaves))
+    out = [p if d == "fp32"
+           else _decode_leaf(p, _QMAX[d], d == "int4", s)
+           for p, s, d in zip(leaves, shapes, dts)]
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def payload_nbytes(payload, comm_dtype: str) -> int:
+def payload_nbytes(payload, comm_dtype) -> int:
     """Measured bytes of an encoded payload (``q`` buffers + scales for
-    quantized dtypes, raw fp32 buffers otherwise) — the number a real
+    quantized leaves, raw fp32 buffers otherwise) — the number a real
     transport moves, as opposed to the simulated ``_wire_bytes``."""
     if comm_dtype == "fp32":
         return sum(int(np.prod(np.shape(x))) * 4
                    for x in jax.tree_util.tree_leaves(payload))
     leaves = jax.tree_util.tree_flatten(
-        payload, is_leaf=lambda x: isinstance(x, dict) and "q" in x)[0]
-    return sum(int(np.prod(np.shape(p["q"]))) + _SCALE_BYTES
-               for p in leaves)
+        payload, is_leaf=_is_wire_leaf)[0]
+    return sum(
+        int(np.prod(np.shape(p["q"]))) + _SCALE_BYTES if _is_wire_leaf(p)
+        else int(np.prod(np.shape(p))) * 4
+        for p in leaves)
 
 
-def quantize_with_feedback(delta, residual, comm_dtype: str, *,
+def quantize_with_feedback(delta, residual, comm_dtype, *,
                            return_payload: bool = False):
     """Encode ``delta`` for the wire with error feedback.
 
@@ -269,11 +328,15 @@ def quantize_with_feedback(delta, residual, comm_dtype: str, *,
     return wire, new_residual
 
 
-def tree_wire_bytes(tree, comm_dtype: str = "fp32") -> int:
+def tree_wire_bytes(tree, comm_dtype="fp32") -> int:
     """Simulated wire bytes for a whole tree payload."""
     leaves = jax.tree_util.tree_leaves(tree)
-    n = sum(int(np.prod(np.shape(x))) for x in leaves)
-    return _wire_bytes(n, len(leaves), comm_dtype)
+    if isinstance(comm_dtype, str):
+        n = sum(int(np.prod(np.shape(x))) for x in leaves)
+        return _wire_bytes(n, len(leaves), comm_dtype)
+    dts = _leaf_dtype_list(comm_dtype, len(leaves))
+    return int(sum(_wire_bytes(int(np.prod(np.shape(x))), 1, d)
+                   for x, d in zip(leaves, dts)))
 
 
 def fragment_send_slot(fragment: int, stagger: int, num_fragments: int
@@ -285,3 +348,98 @@ def fragment_send_slot(fragment: int, stagger: int, num_fragments: int
     reporting shard already runs its next phase.  ``stagger=0`` puts
     every fragment in slot 0 (the classic DiLoCo burst)."""
     return (fragment * stagger) % num_fragments
+
+
+# ---------------------------------------------------------------------
+# heterogeneous-fleet policies: per-leaf comm dtypes + bandwidth-aware
+# fragment schedules (elastic-fleet layer)
+# ---------------------------------------------------------------------
+
+# comm-dtype policies accepted by DiPaCoConfig.comm_dtype_policy
+COMM_DTYPE_POLICIES = ("uniform", "leafwise")
+
+# leaves whose path names match any of these stay fp32 under the
+# leafwise policy: norm gains and embeddings are tiny but precision-
+# critical (the DiPaCo/Streaming-DiLoCo quantization recipe only
+# squeezes the large matmul deltas)
+_FP32_LEAF_NAMES = ("norm", "embed", "bias", "scale")
+
+
+def leaf_comm_dtypes(template, base_dtype: str = "int8", *,
+                     large_elems: int = 1 << 16,
+                     fp32_names=_FP32_LEAF_NAMES) -> list:
+    """Per-leaf wire dtypes for ``template`` (flatten order).
+
+    The ``"leafwise"`` policy of the elastic fleet: leaves whose path
+    contains an ``fp32_names`` token (norms, embeddings) or that are
+    vectors ship fp32; large matmul leaves (``>= large_elems``
+    elements) drop to int4; everything else ships ``base_dtype``.
+    Pure function of the template's structure — every process agrees,
+    so mixed-dtype wire payloads replay bit-exactly on resume."""
+    if base_dtype not in COMM_DTYPES:
+        raise ValueError(
+            f"base_dtype {base_dtype!r} not in {COMM_DTYPES}")
+    flat = jax.tree_util.tree_flatten_with_path(template)[0]
+    out = []
+    for path, x in flat:
+        name = jax.tree_util.keystr(path).lower()
+        shape = np.shape(x)
+        if any(tok in name for tok in fp32_names) or len(shape) < 2:
+            out.append("fp32")
+        elif int(np.prod(shape)) >= large_elems and base_dtype != "fp32":
+            out.append("int4")
+        else:
+            out.append(base_dtype)
+    return out
+
+
+def resolve_comm_dtype(policy: str, comm_dtype: str, template):
+    """Resolve a config ``(comm_dtype_policy, comm_dtype)`` pair into
+    the value the codec functions take: the plain dtype string under
+    ``"uniform"`` (the bit-identical legacy path) or a per-leaf list
+    from :func:`leaf_comm_dtypes` under ``"leafwise"``."""
+    if policy not in COMM_DTYPE_POLICIES:
+        raise ValueError(
+            f"comm_dtype_policy {policy!r} not in {COMM_DTYPE_POLICIES}")
+    if policy == "uniform":
+        return comm_dtype
+    dts = leaf_comm_dtypes(template, comm_dtype)
+    # a leafwise resolution that keeps everything fp32 IS the fp32
+    # path — normalize so callers take the zero-copy branch
+    if all(d == "fp32" for d in dts):
+        return "fp32"
+    return dts
+
+
+def bandwidth_slots(spec: FragmentSpec, stagger: int, comm_dtype="fp32",
+                    *, bandwidth: float | None = None,
+                    ref_bandwidth: float | None = None) -> list:
+    """Per-fragment send slots for one worker's link profile.
+
+    Fast links (``bandwidth`` unset or >= ``ref_bandwidth``) keep the
+    canonical :func:`fragment_send_slot` schedule exactly.  A slow link
+    re-ranks fragments by ascending wire bytes before applying the same
+    slot formula, so its smallest fragments land in the earliest slots
+    — the link drains cheap payloads first and the big ones ride the
+    in-flight tail instead of blocking the phase boundary."""
+    K = spec.num_fragments
+    ranks = list(range(K))
+    if (bandwidth is not None and ref_bandwidth
+            and bandwidth < ref_bandwidth):
+        order = sorted(range(K),
+                       key=lambda f: (spec.wire_bytes(f, comm_dtype), f))
+        rank_of = {f: r for r, f in enumerate(order)}
+        ranks = [rank_of[f] for f in range(K)]
+    return [fragment_send_slot(ranks[f], stagger, K) for f in range(K)]
+
+
+def payload_checksum(payload) -> int:
+    """crc32 over the raw bytes of every payload leaf (encoded ``q`` /
+    ``scale`` dicts and fp32 buffers alike), in flatten order.  The
+    transport stamps this on each send; the receiver recomputes it and
+    rejects corrupted deliveries, turning silent bit flips into retries."""
+    crc = 0
+    for x in jax.tree_util.tree_leaves(payload):
+        a = np.ascontiguousarray(np.asarray(x))
+        crc = zlib.crc32(a.tobytes(), crc)
+    return crc & 0xFFFFFFFF

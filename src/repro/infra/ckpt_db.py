@@ -28,7 +28,7 @@ class CkptRow:
     phase: int
     step: int
     file: str
-    kind: str = "train"          # train | opt | snap | module | qres | flush
+    kind: str = "train"     # train | opt | snap | module | qres | flush | fleet
     level: int = -1              # kind="module": which executor wrote it
     expert: int = -1             # (-1, -1) = the shared-leaves executor
     fragment: int = -1           # kind="module": which fragment window
@@ -170,6 +170,11 @@ class CheckpointDB:
     def _gc_locked(self, row: CkptRow) -> list:
         group = [r for r in self._rows if self._group(r) == self._group(row)]
         if len(group) <= self.max_rows_per_path:
+            return []
+        if row.kind == "fleet":
+            # membership epochs must replay in full: quorum sizes at
+            # each point of the train-delta replay depend on the whole
+            # join/leave history, so fleet rows are never collected
             return []
         if row.kind == "module":
             # resume-replay safety: a module row records which train

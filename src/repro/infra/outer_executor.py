@@ -47,11 +47,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fragments import FragmentSpec
+from repro.core.diloco import quorum_size
+from repro.core.fragments import FragmentSpec, resolve_comm_dtype
 from repro.core.module_store import ModuleStore
 from repro.core.partition import PathPartition, paths_through_module
 from repro.optim.nesterov import nesterov_update
 from .ckpt_db import load_tree
+
+# how many window phases back a consumed (worker, tag) key is
+# remembered for dedup before being pruned; far beyond any
+# max_phase_lag a service would run with
+_CONSUMED_HORIZON = 64
 
 
 class _FragWindow:
@@ -86,9 +92,14 @@ class _ExecutorBase:
         self.rescale = rescale
         self.quorum_frac = quorum
         self.active = set(self.members)
-        self.quorum = max(1, math.ceil(quorum * len(self.active)))
+        self.quorum = quorum_size(quorum, len(self.active))
+        # evicted workers whose in-flight stragglers may still fold as
+        # lagged contributions (granted by resize_membership, revoked
+        # by plain set_active path sampling)
+        self._lagged_ok: set = set()
         self.db = ckpt_db
         self._lock = threading.Lock()
+        self._dtype_cache: dict = {}
         params = self._params()
         self.spec = FragmentSpec(params, fragments)
         p_leaves = self.spec.flatten(params)
@@ -154,16 +165,47 @@ class _ExecutorBase:
         this phase; the module updates from whichever of its
         contributors are active (none active -> module untouched).
         ``phase`` aligns every fragment's window counter in barrier
-        mode, where an executor may sit out whole phases."""
+        mode, where an executor may sit out whole phases — there the
+        windows are reset for the fresh phase.  Without ``phase``
+        (mid-run resizing) accumulating windows are *preserved* and
+        re-checked against the recomputed quorum: shrinking the fleet
+        must never strand a window that already meets the new bar."""
         with self._lock:
             self.active = self.members & set(int(w) for w in active_workers)
-            self.quorum = max(1, math.ceil(
-                self.quorum_frac * max(len(self.active), 1)))
+            self._lagged_ok = set()
+            self.quorum = quorum_size(self.quorum_frac, len(self.active))
             if phase is not None:
                 for w in self.windows:
                     w.phase = int(phase)
                     w.early.clear()
-            self._reset()
+                self._reset()
+            else:
+                for w in self.windows:
+                    self._check_quorum_locked(w)
+
+    def resize_membership(self, active_workers) -> None:
+        """Elastic fleet join/leave: like :meth:`set_active` mid-run,
+        but workers evicted by this change keep permission to fold
+        their in-flight stragglers as lagged contributions (they never
+        double-count — the ``(worker, tag)`` dedup holds across the
+        membership change)."""
+        with self._lock:
+            new_active = self.members & set(
+                int(w) for w in active_workers)
+            evicted = self.active - new_active
+            self._lagged_ok = (self._lagged_ok | evicted) - new_active
+            self.active = new_active
+            self.quorum = quorum_size(self.quorum_frac, len(new_active))
+            for w in self.windows:
+                self._check_quorum_locked(w)
+
+    def _check_quorum_locked(self, win: _FragWindow) -> None:
+        """Satellite fix: a membership change recomputes the quorum —
+        apply any window the (possibly lower) bar is already met by,
+        then drain early arrivals the advance unlocked."""
+        if win.seen and len({w for w, _ in win.seen}) >= self.quorum:
+            self._apply_locked(win)
+        self._drain_locked(win)
 
     def _reset(self):
         for w in self.windows:
@@ -188,8 +230,10 @@ class _ExecutorBase:
         with self._lock:
             # membership must be decided under the lock: a concurrent
             # set_active could otherwise drop or double-count this
-            # contribution mid-accumulation
-            if worker_id not in self.active:
+            # contribution mid-accumulation; workers evicted by an
+            # elastic resize keep folding their stragglers as lagged
+            if (worker_id not in self.active
+                    and worker_id not in self._lagged_ok):
                 return False
             if fragment is None:
                 windows = self.windows
@@ -271,6 +315,14 @@ class _ExecutorBase:
         win.updates += 1
         applied_phase = win.phase
         consumed = sorted(win.seen)
+        # a replayed send (task re-leased after lease expiry, transport
+        # duplicate) arriving after this apply must be a no-op in the
+        # next window, not a second fold inflating wsum: remember what
+        # this window consumed, pruned to a phase horizon
+        win.consumed.update(win.seen)
+        if len(win.consumed) > 4 * _CONSUMED_HORIZON:
+            floor = win.phase - _CONSUMED_HORIZON
+            win.consumed = {k for k in win.consumed if k[1] >= floor}
         win.phase = applied_phase + 1
         self._reset_window(win)
         if self.db is not None:
@@ -284,6 +336,15 @@ class _ExecutorBase:
                        "updates": int(win.updates),
                        "frag_phase": int(applied_phase),
                        "num_fragments": int(self.spec.num_fragments)})
+
+    def resolve_dtypes(self, policy: str, comm_dtype: str):
+        """Per-leaf wire dtypes of this executor's module under a comm
+        policy, cached (pure function of the module template)."""
+        key = (policy, comm_dtype)
+        if key not in self._dtype_cache:
+            self._dtype_cache[key] = resolve_comm_dtype(
+                policy, comm_dtype, self._params())
+        return self._dtype_cache[key]
 
     # -- recovery (TrainingService.resume) -----------------------------
     def ckpt_like(self):
@@ -423,6 +484,13 @@ class ShardedOuterExecutors:
         for ex in self._all().values():
             ex.set_active(active_workers, phase=phase)
 
+    def resize_membership(self, active_workers) -> None:
+        """Elastic fleet join/leave across every executor: quorums
+        recompute, filled windows drain, evicted workers keep lagged-
+        fold permission for their in-flight stragglers."""
+        for ex in self._all().values():
+            ex.resize_membership(active_workers)
+
     def accumulate(self, worker_id: int, delta_tree,
                    phase: int | None = None, fragment=None) -> list:
         """Feed one path checkpoint (or one fragment / one send-slot's
@@ -441,14 +509,18 @@ class ShardedOuterExecutors:
         return completed
 
     def frag_bytes(self, worker_id: int, fragment: int,
-                   comm_dtype: str = "fp32") -> int:
+                   comm_dtype: str = "fp32", *,
+                   policy: str = "uniform") -> int:
         """Simulated wire bytes worker ``worker_id`` ships for fragment
-        ``fragment`` of one report (sum over the modules it feeds)."""
+        ``fragment`` of one report (sum over the modules it feeds).
+        ``policy="leafwise"`` prices each module with its per-leaf
+        dtype mix (int4 matmuls / fp32 norms)."""
         total = 0
         for ex in self._all().values():
             if (worker_id in ex.members
                     and fragment < ex.spec.num_fragments):
-                total += ex.spec.wire_bytes(fragment, comm_dtype)
+                total += ex.spec.wire_bytes(
+                    fragment, ex.resolve_dtypes(policy, comm_dtype))
         return total
 
     def restore_from_db(self, db) -> None:

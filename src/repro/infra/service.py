@@ -42,7 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fragments import (COMM_DTYPES, fragment_send_slot,
-                                  quantize_with_feedback)
+                                  quantize_with_feedback,
+                                  resolve_comm_dtype)
 from repro.core.module_store import ModuleStore
 from repro.core.partition import make_partition
 from repro.data.loader import ShardLoader, phase_batches
@@ -52,6 +53,7 @@ from repro.models.config import DiPaCoConfig, ModelConfig
 from repro.optim import adamw_init, adamw_update, cosine_schedule
 from repro.core.dipaco import PhaseMetrics
 from .ckpt_db import CheckpointDB, load_tree
+from .fleet import FleetController
 from .outer_executor import ShardedOuterExecutors
 from .transport import make_transport
 from .task_queue import Task, TaskQueue
@@ -74,7 +76,8 @@ class TrainingService:
                  max_phase_lag: int = 0, phase_timeout: float = 600.0,
                  lease_seconds: float = 120.0,
                  monitor_period: float = 0.05, max_attempts: int = 50,
-                 ckpt_retention: int | None = None, resume: bool = False):
+                 ckpt_retention: int | None = None, profiles=None,
+                 resume: bool = False):
         self.cfg, self.dcfg = cfg, dcfg
         self.partition = make_partition(dcfg, cfg.pattern_repeats)
         P = self.partition.num_paths
@@ -99,6 +102,12 @@ class TrainingService:
         if dcfg.comm_dtype not in COMM_DTYPES:
             raise ValueError(f"comm_dtype {dcfg.comm_dtype!r} not in "
                              f"{COMM_DTYPES}")
+        # elastic fleet: which shards currently contribute + get pumped
+        # (FleetController mutates this under _commit_lock)
+        self.members: set = set(range(W))
+        # per-worker link/compute/preemption profiles (infra/fleet.py);
+        # {} = homogeneous reference fleet, bit-identical legacy paths
+        self.profiles = {int(s): p for s, p in (profiles or {}).items()}
         self.execs = ShardedOuterExecutors(
             self.store, self.partition, self.worker_paths, alphas,
             lr=dcfg.outer_lr, momentum=dcfg.outer_momentum,
@@ -112,15 +121,28 @@ class TrainingService:
         # shard's next commit (or at a run/run_phase flush point,
         # recorded as a kind="flush" row so resume replays the exact
         # fold order).
-        self._comm_dtype = dcfg.comm_dtype
+        # wire dtype: the "uniform" policy keeps the plain dtype string
+        # (bit-identical legacy path); "leafwise" resolves a per-leaf
+        # list over the path-delta template (fp32 norms/embeddings,
+        # int4 large matmuls — core.fragments.leaf_comm_dtypes)
+        self._base_dtype = dcfg.comm_dtype
+        self._comm_policy = dcfg.comm_dtype_policy
+        self._comm_dtype = resolve_comm_dtype(
+            dcfg.comm_dtype_policy, dcfg.comm_dtype,
+            self.store.assemble(int(self.worker_paths[0])))
         self._stagger = dcfg.fragment_stagger
+        # bandwidth-aware send schedule: per-shard slot tables (slow
+        # links ship small fragments first), lazily built from profiles
+        self._slot_cache: dict = {}
         # delta transport: "inproc" passes the wire tree by reference,
         # "mesh" ships the encoded payload across a device boundary
         # (infra/transport.py) — fold values are bit-identical either
         # way, so resume replay (which bypasses the transport) works
-        # across backends
-        self.transport = make_transport(dcfg.transport,
-                                        comm_dtype=dcfg.comm_dtype)
+        # across backends.  transport_retries/transport_faults wrap it
+        # in the retry/backoff/fault-injection chaos layer.
+        self.transport = make_transport(
+            dcfg.transport, comm_dtype=self._comm_dtype,
+            retries=dcfg.transport_retries, faults=dcfg.transport_faults)
         self._pending: dict = {i: [] for i in range(W)}   # s -> [(ph, f)]
         self._pending_payload: dict = {}                  # (s, ph) -> wire
         self._pending_count: dict = {}                    # (s, ph) -> refs
@@ -162,11 +184,25 @@ class TrainingService:
             s = _w()
             return None if s is None else s._handle(task)
 
+        preempt_for = None
+        if self.profiles:
+            # heterogeneous preemption: spot-tier shards die more often
+            # (same weakref discipline as the handler)
+            def preempt_for(task, _w=wself):
+                s = _w()
+                if s is None:
+                    return 0.0
+                prof = s.profiles.get(task.payload.get("shard_id"))
+                return (prof.preempt_rate if prof is not None
+                        else s.pool.preempt_prob)
+
         self.pool = WorkerPool(self.queue, _pool_handler,
                                num_workers=num_workers,
-                               preempt_prob=preempt_prob, seed=seed,
+                               preempt_prob=preempt_prob,
+                               preempt_for=preempt_for, seed=seed,
                                name="svc")
         self.monitor = Monitor(self.pool, period=monitor_period)
+        self.fleet = FleetController(self)
         self._started = False
         if resume:
             self._restore_from_db()
@@ -258,6 +294,12 @@ class TrainingService:
             lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
             params0, params)
         loss = float(np.asarray(losses).mean())
+        prof = self.profiles.get(shard)
+        if prof is not None and prof.compute < 1.0:
+            # heterogeneous compute: a slow machine's phase takes
+            # proportionally longer — real straggler pressure for the
+            # staleness window and the lag metrics
+            time.sleep(min(0.05 * (1.0 / prof.compute - 1.0), 0.5))
         with self._commit_lock:
             if (shard, t) in self._phase_done:
                 return {"shard": shard, "stale": True}  # lost a retry race
@@ -267,6 +309,7 @@ class TrainingService:
             # delta.  The *wire* payload is what persists and what the
             # executors fold — the resume replay is therefore exact.
             wire, payload = delta, delta
+            prev_resid = self._qresid[shard]
             if self._comm_dtype != "fp32":
                 wire, resid, payload = quantize_with_feedback(
                     delta, self._qresid[shard], self._comm_dtype,
@@ -277,45 +320,88 @@ class TrainingService:
             # the transport hop: inproc returns ``wire`` by reference,
             # mesh ships the encoded ``payload`` across a device
             # boundary and decodes it back to the same bits
-            wire = self.transport.ship(shard, wire, payload)
+            try:
+                wire = self.transport.ship(shard, wire, payload, phase=t)
+            except Exception:
+                # retry exhaustion (TransportError): nothing was
+                # delivered or recorded as train state — roll the
+                # error-feedback residual back so the task's re-run
+                # quantizes from the exact pre-send state (the orphan
+                # qres row is ignored by resume for the same reason)
+                self._qresid[shard] = prev_resid
+                raise
             # the artifacts the paper ships via GFS: the delta (consumed
             # online by executors + the resume replay) and the inner
             # optimizer state (resume only)
             self.db.write(wire, path_id=shard, phase=t,
                           step=start_step + tau, kind="train",
                           extra={"loss": loss,
-                                 "comm_dtype": self._comm_dtype,
+                                 "comm_dtype": self._base_dtype,
+                                 "comm_policy": self._comm_policy,
                                  "comm_bytes": self._report_bytes(shard)})
             self.db.write(opt, path_id=shard, phase=t,
                           step=start_step + tau, kind="opt")
             self.opt_states[shard] = opt
             self.losses[(t, shard)] = loss
-            self._ingest_locked(shard, t, wire)
+            dup = bool(getattr(self.transport, "last", {}).get("dup"))
+            self._ingest_locked(shard, t, wire, dup_replay=dup)
             self._complete(shard, t)
         return {"shard": shard, "loss": loss}
 
     # -- streaming fragment hand-off -----------------------------------
     def _report_bytes(self, shard: int) -> int:
-        return sum(self.execs.frag_bytes(shard, f, self._comm_dtype)
+        return sum(self.execs.frag_bytes(shard, f, self._base_dtype,
+                                         policy=self._comm_policy)
                    for f in range(self.execs.fragments))
 
+    def _shard_slots(self, shard: int) -> list:
+        """Per-fragment send slots for this shard's link profile.  The
+        reference link (no profile, or bandwidth >= 1.0) keeps the
+        canonical ``fragment_send_slot`` schedule exactly — bit-
+        identical to the homogeneous fleet; a slow link re-ranks
+        fragments by ascending wire bytes before the same slot formula
+        so its cheap fragments drain first and the heavy ones ride the
+        in-flight tail."""
+        slots = self._slot_cache.get(shard)
+        if slots is None:
+            K = self.execs.fragments
+            prof = self.profiles.get(shard)
+            ranks = list(range(K))
+            if prof is not None and prof.bandwidth < 1.0:
+                sizes = [self.execs.frag_bytes(
+                    shard, f, self._base_dtype, policy=self._comm_policy)
+                    for f in range(K)]
+                order = sorted(range(K), key=lambda f: (sizes[f], f))
+                ranks = [0] * K
+                for r, f in enumerate(order):
+                    ranks[f] = r
+            slots = [fragment_send_slot(ranks[f], self._stagger, K)
+                     for f in range(K)]
+            self._slot_cache[shard] = slots
+        return slots
+
     def _ingest_locked(self, shard: int, t: int, wire,
-                       record_stats: bool = True) -> None:
+                       record_stats: bool = True,
+                       dup_replay: bool = False) -> None:
         """Hand one report off to the executors on the fragment send
         schedule: the shard's previous in-flight fragments are now due
         (its next phase has begun), slot-0 fragments of this report
         fold immediately, later slots are parked in flight.  Each slot
-        is one simulated send instant for the comms accounting."""
+        is one simulated send instant for the comms accounting.
+        ``dup_replay`` re-delivers the slot-0 fold once more (a
+        transport duplicate) — the executors' ``(worker, tag)`` dedup
+        makes it a strict no-op, keeping chaos runs bit-exact."""
         self._flush_shard_locked(shard)
         K = self.execs.fragments
+        send_slot = self._shard_slots(shard)
         slots: dict = {}
         for f in range(K):
-            slots.setdefault(
-                fragment_send_slot(f, self._stagger, K), []).append(f)
+            slots.setdefault(send_slot[f], []).append(f)
         for slot in sorted(slots):
             frags = slots[slot]
             if record_stats:
-                b = sum(self.execs.frag_bytes(shard, f, self._comm_dtype)
+                b = sum(self.execs.frag_bytes(shard, f, self._base_dtype,
+                                              policy=self._comm_policy)
                         for f in frags)
                 self.comm_stats["sends"] += 1
                 self.comm_stats["total_comm_bytes"] += b
@@ -325,6 +411,11 @@ class TrainingService:
                 # one call folds the whole slot: the delta is sliced
                 # and flattened once per executor, not once per fragment
                 self.execs.accumulate(shard, wire, phase=t, fragment=frags)
+                if dup_replay:
+                    # the duplicate of this send instant: every key is
+                    # already in the window's seen set, so nothing folds
+                    self.execs.accumulate(shard, wire, phase=t,
+                                          fragment=frags)
             else:
                 for f in frags:
                     self._pending[shard].append((t, f))
@@ -385,8 +476,11 @@ class TrainingService:
         todo = []
         with self._clock_cv:
             if self._target:
-                mn = min(self.clock.values())
-                for s in range(self.num_shards):
+                members = sorted(self.members)
+                if not members:
+                    return
+                mn = min(self.clock[s] for s in members)
+                for s in members:
                     t = self.clock[s]
                     if (t >= self._target or s in self._inflight
                             or t > mn + self.max_phase_lag):
@@ -429,26 +523,33 @@ class TrainingService:
         self._pump()
         deadline = time.time() + timeout
         with self._clock_cv:
+            # the wait set re-evaluates each pass: shards that leave
+            # the fleet mid-wait stop being waited on (leave() notifies)
             while any(self.clock[s] < target
-                      for s in range(self.num_shards)):
+                      for s in sorted(self.members)):
                 if time.time() >= deadline:
                     raise PhaseTimeoutError(
                         f"service did not reach phase {target}: "
-                        f"clocks={self.clock} queue={self.queue.stats()}")
+                        f"clocks={self.clock} members="
+                        f"{sorted(self.members)} "
+                        f"queue={self.queue.stats()}")
                 self._clock_cv.wait(timeout=0.1)
         # sync point: fold fragments still in flight from the last
         # phases (a marker row keeps the resume replay order-faithful)
         with self._commit_lock:
             self._flush_all_locked()
         last = target - 1
-        mean_loss = float(np.mean(
-            [self.losses[(last, s)] for s in range(self.num_shards)])) \
-            if target > 0 else float("nan")
+        vals = [self.losses[(last, s)] for s in sorted(self.members)
+                if (last, s) in self.losses]
+        mean_loss = float(np.mean(vals)) if vals and target > 0 \
+            else float("nan")
         return {"phases": target, "mean_loss": mean_loss,
                 "outer_updates": self.execs.total_updates,
                 "preemptions": self.pool.preemptions,
                 "monitor_restarts": self.monitor.restarts,
                 "max_observed_lag": self.max_observed_lag,
+                "members": sorted(self.members),
+                "fleet_epoch": self.fleet.epoch,
                 "comm": dict(self.comm_stats),
                 "transport": dict(self.transport.stats),
                 "queue": self.queue.stats()}
@@ -582,6 +683,13 @@ class TrainingService:
                     record_stats=False)
             elif r.kind == "flush":
                 self._flush_all_locked(write_marker=False)
+            elif r.kind == "fleet":
+                # membership epochs replay at their exact point of the
+                # row order: quorums shrink/grow and evicted workers
+                # regain lagged-fold permission precisely where they
+                # did live — resume through an epoch change stays
+                # bit-exact
+                self.fleet.restore_row(r)
         # 4. async bookkeeping: outstanding target covers every phase
         #    that was started (committed or in-flight)
         self._target = max(

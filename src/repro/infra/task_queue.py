@@ -105,6 +105,26 @@ class TaskQueue:
                 self._pending.appendleft(task)
             self._lock.notify_all()
 
+    def cancel(self, predicate) -> list:
+        """Drop pending tasks matching ``predicate(task)`` (a worker
+        leaving the fleet takes its queued work with it) and return
+        them — the caller needs to know which shards lost their queued
+        work to clear its own in-flight bookkeeping.  Leased tasks are
+        not touched — an in-flight execution is allowed to finish and
+        fold as a lagged straggler."""
+        with self._lock:
+            keep: deque = deque()
+            dropped: list = []
+            for t in self._pending:
+                if predicate(t):
+                    dropped.append(t)
+                else:
+                    keep.append(t)
+            self._pending = keep
+            if dropped:
+                self._lock.notify_all()
+            return dropped
+
     def _reap_expired_locked(self):
         now = time.time()
         expired = [tid for tid, (_, dl) in self._leased.items() if dl < now]

@@ -28,11 +28,15 @@ class Preempted(RuntimeError):
 class WorkerPool:
     def __init__(self, queue: TaskQueue, handler: Callable[[Task], object],
                  *, num_workers: int = 4, preempt_prob: float = 0.0,
+                 preempt_for: Callable[[Task], float] | None = None,
                  seed: int = 0, name: str = "pool"):
         self.queue = queue
         self.handler = handler
         self.num_workers = num_workers
         self.preempt_prob = preempt_prob
+        # heterogeneous fleets: per-task preemption rate (e.g. from the
+        # reporting shard's WorkerProfile); overrides preempt_prob
+        self.preempt_for = preempt_for
         self.rng = random.Random(seed)
         self.name = name
         self._threads: list = []
@@ -40,18 +44,36 @@ class WorkerPool:
         self.completed = 0
         self.preemptions = 0
         self._lock = threading.Lock()
+        # serializes capacity reconciliation: only one caller (resize
+        # or Monitor) may be spawning toward the target at a time, and
+        # each spawn re-checks the deficit — a Monitor tick landing
+        # between a resize's target bump and its spawns must not spawn
+        # the same workers again (over-spawn is permanent: nothing
+        # retires extras)
+        self._spawn_lock = threading.Lock()
         self._next_wid = 0
+        self._retire = 0            # threads asked to exit (downsize)
         self.spawned: list = []     # every worker id ever started
 
     def _run(self, wid: int):
         while not self._stop.is_set():
+            with self._lock:
+                if self._retire > 0:
+                    # capacity shrink: this machine is returned to the
+                    # provider; its thread exits without a replacement
+                    self._retire -= 1
+                    self._threads = [t for t in self._threads
+                                     if t is not threading.current_thread()]
+                    return
             task = self.queue.fetch(timeout=0.2)
             if task is None:
                 if self.queue._closed:
                     return
                 continue
             try:
-                if self.rng.random() < self.preempt_prob:
+                p = (self.preempt_for(task) if self.preempt_for
+                     else self.preempt_prob)
+                if self.rng.random() < p:
                     with self._lock:
                         self.preemptions += 1
                     raise Preempted(f"worker {wid} preempted")
@@ -81,9 +103,47 @@ class WorkerPool:
         return t
 
     def start(self):
-        for _ in range(self.num_workers):
-            self.spawn_worker()
+        self._reconcile()
         return self
+
+    def resize(self, num_workers: int) -> None:
+        """Elastic capacity change: grow by spawning fresh workers,
+        shrink by asking surplus threads to retire at their next fetch
+        (the Monitor's restart target follows ``num_workers``)."""
+        num_workers = max(0, int(num_workers))
+        with self._lock:
+            cur = len([t for t in self._threads if t.is_alive()])
+            self.num_workers = num_workers
+            delta = num_workers - (cur - self._retire)
+            if delta < 0:
+                self._retire += -delta
+            else:
+                self._retire -= min(delta, self._retire)
+        self._reconcile()
+
+    def _reconcile(self) -> int:
+        """Spawn workers toward ``num_workers`` (net of pending
+        retires); returns how many were spawned.  The deficit is
+        snapshotted once *inside* ``_spawn_lock``, so a concurrent
+        resize/Monitor pair can never double-spawn toward one target —
+        the second caller's snapshot already sees the first caller's
+        spawns.  Deliberately NOT a converge loop: a worker dying while
+        we spawn (high preempt rate) waits for the next Monitor tick,
+        keeping restarts period-paced instead of a hot respawn spin."""
+        spawned = 0
+        with self._spawn_lock:
+            with self._lock:
+                alive = [t for t in self._threads if t.is_alive()]
+                self._threads = alive
+                budget = self.num_workers - len(alive) + self._retire
+            while spawned < budget and not self._stop.is_set():
+                self.spawn_worker()
+                spawned += 1
+        return spawned
+
+    def alive_count(self) -> int:
+        with self._lock:
+            return len([t for t in self._threads if t.is_alive()])
 
     def stop(self, timeout: float = 5.0):
         self._stop.set()
@@ -110,15 +170,12 @@ class Monitor:
             time.sleep(self.period)
             if self.pool._stop.is_set():
                 continue
-            with self.pool._lock:
-                alive = [t for t in self.pool._threads if t.is_alive()]
-                dead = len(self.pool._threads) - len(alive)
-                self.pool._threads = alive
-            for _ in range(dead):
-                if self.pool._stop.is_set() or self._stop.is_set():
-                    break
-                self.pool.spawn_worker()
-                self.restarts += 1
+            # restart toward the pool's *current* capacity target
+            # (elastic resize moves it), never past it — a retired
+            # thread is an intentional shrink, not a death, and the
+            # spawn-locked reconcile re-checks the deficit per spawn
+            # so a concurrent resize can't be double-counted
+            self.restarts += self.pool._reconcile()
 
     def start(self):
         self._thread.start()

@@ -217,6 +217,24 @@ class MeshStreamingTrainer:
         return row(self.worker_params, self.worker_of_path(i))
 
 
+def _parse_profiles(specs):
+    """``SHARD:BANDWIDTH[:COMPUTE[:PREEMPT]]`` → {shard: WorkerProfile}."""
+    from repro.infra.fleet import WorkerProfile
+    profiles = {}
+    for spec in specs:
+        parts = spec.split(":")
+        if not 2 <= len(parts) <= 4:
+            raise SystemExit(f"bad --profile {spec!r}: expected "
+                             "SHARD:BANDWIDTH[:COMPUTE[:PREEMPT]]")
+        shard = int(parts[0])
+        nums = [float(x) for x in parts[1:]]
+        profiles[shard] = WorkerProfile(
+            bandwidth=nums[0],
+            compute=nums[1] if len(nums) > 1 else 1.0,
+            preempt_rate=nums[2] if len(nums) > 2 else 0.0)
+    return profiles
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="dipaco-150m")
@@ -228,14 +246,50 @@ def main() -> None:
     ap.add_argument("--docs", type=int, default=512)
     ap.add_argument("--smoke", action="store_true", default=None)
     ap.add_argument("--backend", default="vector",
-                    choices=("vector", "mesh"),
+                    choices=("vector", "mesh", "service", "barrier"),
                     help="trainer backend (repro.make_trainer); 'mesh' "
                          "runs the streaming fragment schedule through "
-                         "real collectives")
+                         "real collectives; 'service'/'barrier' run the "
+                         "checkpointed worker-pool infrastructure")
+    ap.add_argument("--ckpt-root", default=None,
+                    help="CheckpointDB root for service/barrier (and "
+                         "optional mesh phase snapshots); a tempdir is "
+                         "created when omitted")
+    ap.add_argument("--num-workers", type=int, default=4,
+                    help="pool threads for --backend service/barrier")
+    ap.add_argument("--max-phase-lag", type=int, default=1,
+                    help="staleness window for --backend service")
     ap.add_argument("--fragments", type=int, default=1,
                     help="outer fragments K for --backend mesh")
     ap.add_argument("--comm-dtype", default="fp32",
                     choices=("fp32", "int8", "int4"))
+    ap.add_argument("--comm-dtype-policy", default="uniform",
+                    choices=("uniform", "leafwise"),
+                    help="'leafwise' quantizes large matmul leaves hard "
+                         "(int4) but keeps norms/embeddings high "
+                         "precision")
+    ap.add_argument("--transport-retries", type=int, default=0,
+                    help="per-send retry budget (exponential backoff) "
+                         "for the service transport")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="deterministic fault-injection seed")
+    ap.add_argument("--fault-drop", type=float, default=0.0)
+    ap.add_argument("--fault-dup", type=float, default=0.0)
+    ap.add_argument("--fault-corrupt", type=float, default=0.0)
+    ap.add_argument("--fault-delay", type=float, default=0.0)
+    ap.add_argument("--fault-delay-s", type=float, default=0.01,
+                    help="injected delay duration per delayed send")
+    ap.add_argument("--profile", action="append", default=[],
+                    metavar="SHARD:BW[:COMPUTE[:PREEMPT]]",
+                    help="per-worker fleet profile (repeatable); "
+                         "bandwidth < 1 re-ranks that worker's fragment "
+                         "sends smallest-first")
+    ap.add_argument("--chaos-kill-frac", type=float, default=0.0,
+                    help="service backend: evict this fraction of the "
+                         "fleet mid-phase, then rejoin it for the last "
+                         "phase (ChaosController)")
+    ap.add_argument("--chaos-phase", type=int, default=1,
+                    help="phase at which --chaos-kill-frac fires")
     args = ap.parse_args()
 
     smoke = args.smoke
@@ -259,20 +313,67 @@ def main() -> None:
     ds = shard_documents(docs, np.asarray(assign), P)
 
     from repro.training import make_trainer
+    faults = None
+    rates = {"drop": args.fault_drop, "dup": args.fault_dup,
+             "corrupt": args.fault_corrupt, "delay": args.fault_delay}
+    if any(v > 0 for v in rates.values()):
+        faults = {"seed": args.fault_seed, "delay_s": args.fault_delay_s,
+                  **rates}
     dcfg = DiPaCoConfig(levels=levels, inner_steps=args.tau,
                         outer_fragments=args.fragments,
-                        comm_dtype=args.comm_dtype)
+                        comm_dtype=args.comm_dtype,
+                        comm_dtype_policy=args.comm_dtype_policy,
+                        transport_retries=args.transport_retries,
+                        transport_faults=faults)
+    kw: dict = {}
+    ckpt_root = args.ckpt_root
+    if args.backend in ("service", "barrier"):
+        if ckpt_root is None:
+            import tempfile
+            ckpt_root = tempfile.mkdtemp(prefix="dipaco-ckpt-")
+            print(f"[launch] ckpt_root={ckpt_root}")
+        kw["num_workers"] = args.num_workers
+        if args.profile:
+            kw["profiles"] = _parse_profiles(args.profile)
+        if args.backend == "service":
+            kw["max_phase_lag"] = args.max_phase_lag
+    if args.backend == "vector":
+        ckpt_root = None
     tr = make_trainer(cfg, dcfg, ds, backend=args.backend, key=key,
-                      base_params=base, batch_size=args.batch_size,
-                      peak_lr=2e-3, warmup=args.tau,
-                      total_steps=args.phases * args.tau)
+                      ckpt_root=ckpt_root, base_params=base,
+                      batch_size=args.batch_size, peak_lr=2e-3,
+                      warmup=args.tau,
+                      total_steps=args.phases * args.tau, **kw)
     t0 = time.time()
-    for ph in range(args.phases):
-        m = tr.run_phase()
-        print(f"[phase {ph}] loss {m.mean_loss:.4f} "
+    if args.backend == "service" and args.chaos_kill_frac > 0:
+        # scripted elasticity demo: kill a fleet fraction mid-phase,
+        # let the survivors train with resized quorums, rejoin the
+        # victims before the final phase
+        from repro.infra import ChaosController
+        events = [{"phase": args.chaos_phase, "action": "kill_frac",
+                   "frac": args.chaos_kill_frac, "when": "mid"}]
+        chaos = ChaosController(tr, events, seed=args.fault_seed)
+        m = chaos.run(max(args.phases - 1, 1), tau=args.tau)
+        print(f"[chaos] events={m['chaos_events']} "
+              f"epoch={m['fleet_epoch']} members={m['members']}")
+        evicted = sorted(set(range(tr.num_shards)) - tr.members)
+        if evicted:
+            tr.fleet.join(evicted)
+            print(f"[chaos] rejoined {evicted}")
+        m = tr.run(1, tau=args.tau)
+        print(f"[final] mean_loss {m['mean_loss']:.4f} "
+              f"members={len(m['members'])} "
+              f"epoch={m['fleet_epoch']} transport={m['transport']} "
               f"({time.time() - t0:.1f}s)")
+    else:
+        for ph in range(args.phases):
+            m = tr.run_phase()
+            print(f"[phase {ph}] loss {m.mean_loss:.4f} "
+                  f"({time.time() - t0:.1f}s)")
     if args.backend == "mesh":
         print(f"[comm] {tr.comm_stats}")
+    if args.backend in ("service", "barrier"):
+        tr.shutdown()
     print("[done]")
 
 

@@ -160,6 +160,21 @@ class DiPaCoConfig:
     # device boundary with jax.device_put and decodes on the executor's
     # device — bit-identical fold values, real measured bytes.
     transport: str = "inproc"
+    # heterogeneous-fleet comm policy (core/fragments.py): "uniform"
+    # quantizes every leaf at ``comm_dtype`` (the bit-identical legacy
+    # path); "leafwise" keeps norms/embeddings fp32, drops large matmul
+    # leaves to int4 and ships the rest at ``comm_dtype``
+    # (``leaf_comm_dtypes``).
+    comm_dtype_policy: str = "uniform"
+    # transport chaos hardening (infra/transport.py): ``transport_retries``
+    # > 0 (or a ``transport_faults`` spec) wraps the backend in a
+    # RetryingTransport — exponential backoff, crc32 checksum rejection
+    # of corrupted deliveries, typed TransportError on exhaustion.
+    # ``transport_faults`` is a FaultInjector kwargs mapping
+    # ({"seed": 0, "drop": 0.1, "dup": 0.05, ...}), deterministic and
+    # replayable per seed.
+    transport_retries: int = 0
+    transport_faults: dict | None = None
 
     @property
     def num_paths(self) -> int:

@@ -1,0 +1,676 @@
+"""Elastic worker fleet (§3.4): chaos-hardened membership, quorum
+resizing, bandwidth-aware fragment schedules, transport retry/fault
+injection, and bit-exact kill-and-resume across membership epochs."""
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.diloco import quorum_size
+from repro.core.fragments import (bandwidth_slots, fake_quantize,
+                                  fragment_send_slot,
+                                  quantize_with_feedback)
+from repro.core.module_store import ModuleStore
+from repro.core.partition import make_partition
+from repro.infra import (ChaosController, FaultInjector, FleetController,
+                         RetryingTransport, RetryPolicy,
+                         ShardedOuterExecutors, Task, TaskQueue,
+                         TrainingService, TransportError, WorkerPool,
+                         WorkerProfile, make_transport)
+from repro.infra.transport import InProcessTransport, MeshTransport
+from repro.models.config import DiPaCoConfig
+
+
+# ---------------------------------------------------------------------
+# helpers (mirrors tests/test_training_service.py)
+# ---------------------------------------------------------------------
+
+def _make_store(tiny_base, levels=(2, 2), pattern_repeats=None):
+    base, axes = tiny_base
+    dcfg = DiPaCoConfig(levels=levels, shared_embeddings=True)
+    part = make_partition(dcfg, pattern_repeats)
+    return ModuleStore(base, axes, part), part, base
+
+
+@pytest.fixture()
+def store4(tiny_cfg, tiny_base):
+    store, part, base = _make_store(
+        tiny_base, levels=(2, 2), pattern_repeats=tiny_cfg.pattern_repeats)
+    return store, part, base
+
+
+def _delta(base, value):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.full(x.shape, value, jnp.float32), base)
+
+
+def _service_kwargs(key, base, **over):
+    kw = dict(key=key, base_params=base, batch_size=4, peak_lr=1e-3,
+              warmup=10, total_steps=100, num_workers=1)
+    kw.update(over)
+    return kw
+
+
+def _tiny_ds(tiny_docs, k=4):
+    from repro.data import shard_documents
+    docs, doms = tiny_docs
+    return shard_documents(docs, doms % k, k)
+
+
+def _assert_paths_equal(a, b, num_paths=4, exact=True):
+    for p in range(num_paths):
+        for la, lb in zip(jax.tree_util.tree_leaves(a.path_params(p)),
+                          jax.tree_util.tree_leaves(b.path_params(p))):
+            if exact:
+                assert jnp.array_equal(la, lb)
+            else:
+                np.testing.assert_allclose(la, lb, rtol=1e-5, atol=1e-6)
+
+
+def _wait_until(cond, timeout=5.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if cond():
+            return True
+        time.sleep(0.02)
+    return cond()
+
+
+# ---------------------------------------------------------------------
+# WorkerProfile
+# ---------------------------------------------------------------------
+
+def test_worker_profile_validation():
+    p = WorkerProfile()
+    assert (p.bandwidth, p.compute, p.preempt_rate) == (1.0, 1.0, 0.0)
+    with pytest.raises(ValueError):
+        WorkerProfile(bandwidth=0.0)
+    with pytest.raises(ValueError):
+        WorkerProfile(compute=-1.0)
+    with pytest.raises(ValueError):
+        WorkerProfile(preempt_rate=1.0)
+
+
+def test_quorum_size_oracle():
+    assert quorum_size(1.0, 4) == 4
+    assert quorum_size(0.5, 4) == 2
+    assert quorum_size(0.5, 3) == 2
+    assert quorum_size(1.0, 0) == 1     # empty fleet never divides by 0
+    assert quorum_size(0.1, 4) == 1
+
+
+# ---------------------------------------------------------------------
+# executor membership: resize, lagged folds, dedup, set_active re-check
+# ---------------------------------------------------------------------
+
+def test_resize_membership_drains_filled_window(store4):
+    """Shrinking the fleet mid-window must immediately apply a window
+    that already meets the *new* quorum, not strand it waiting for the
+    evicted worker."""
+    store, part, base = store4
+    execs = ShardedOuterExecutors(store, part, np.arange(4), quorum=1.0)
+    sh = execs.shared_exec
+    for w in (0, 1, 2):
+        execs.accumulate(w, _delta(base, 0.01 * (w + 1)), phase=0)
+    assert sh.updates == 0 and sh.quorum == 4     # still waiting for 3
+    execs.resize_membership([0, 1, 2])
+    assert sh.quorum == 3
+    assert sh.updates == 1 and sh.phase == 1      # drained immediately
+
+
+def test_evicted_worker_folds_as_lagged_never_double(store4):
+    """An evicted worker's in-flight straggler still folds (as lagged),
+    a replay of the same (worker, tag) after the apply is a no-op, and
+    plain set_active (path sampling) revokes the lagged permission."""
+    store, part, base = store4
+    execs = ShardedOuterExecutors(store, part, np.arange(4), quorum=1.0)
+    sh = execs.shared_exec
+    execs.resize_membership([0, 1, 2])            # evict 3, empty windows
+    assert sh.quorum == 3
+    execs.accumulate(3, _delta(base, 0.04), phase=0)
+    assert (3, 0) in sh.seen and sh.wsum > 0.0    # lagged fold landed
+    execs.accumulate(0, _delta(base, 0.01), phase=0)
+    execs.accumulate(1, _delta(base, 0.02), phase=0)
+    assert sh.updates == 1                        # {3,0,1} met quorum 3
+    # replayed send of the consumed contribution: strict no-op
+    execs.accumulate(3, _delta(base, 0.04), phase=0)
+    assert sh.wsum == 0.0 and not sh.seen
+    # path sampling resets the lagged grant: worker 3 is just inactive
+    execs.set_active([0, 1, 2])
+    assert execs.accumulate(3, _delta(base, 0.05), phase=1) == []
+    assert all((3, 1) not in ex.seen for ex in execs._all().values())
+
+
+def test_set_active_rechecks_accumulating_windows(store4):
+    """Satellite fix: set_active without a phase preserves accumulating
+    windows and re-checks them — a shrunk quorum already met by the
+    window applies right away instead of deadlocking the phase."""
+    store, part, base = store4
+    execs = ShardedOuterExecutors(store, part, np.arange(4), quorum=1.0)
+    sh = execs.shared_exec
+    execs.accumulate(0, _delta(base, 0.01), phase=0)
+    execs.accumulate(1, _delta(base, 0.02), phase=0)
+    assert sh.updates == 0
+    execs.set_active([0, 1])                       # quorum 4 -> 2
+    assert sh.updates == 1 and sh.phase == 1       # applied on re-check
+    # the barrier path (explicit phase) still resets windows
+    execs.accumulate(0, _delta(base, 0.03), phase=1)
+    execs.set_active([0, 1, 2, 3], phase=1)
+    assert sh.wsum == 0.0 and not sh.seen
+
+
+# ---------------------------------------------------------------------
+# pool resize / monitor target / queue cancel
+# ---------------------------------------------------------------------
+
+def test_pool_resize_and_monitor_follow_target():
+    from repro.infra import Monitor
+    q = TaskQueue()
+    pool = WorkerPool(q, lambda t: None, num_workers=4, name="rsz")
+    mon = Monitor(pool, period=0.05)
+    pool.start()
+    mon.start()
+    try:
+        assert _wait_until(lambda: pool.alive_count() == 4)
+        pool.resize(2)                 # shrink: retire at next fetch
+        assert _wait_until(lambda: pool.alive_count() == 2)
+        # the monitor must not "restart" the intentionally retired two
+        time.sleep(0.3)
+        assert pool.alive_count() == 2
+        pool.resize(5)                 # grow: fresh spawns
+        assert _wait_until(lambda: pool.alive_count() == 5)
+        assert pool.num_workers == 5
+    finally:
+        mon.stop()
+        q.close()
+        pool.stop()
+
+
+def test_pool_preempt_for_overrides_global_rate():
+    q = TaskQueue(max_attempts=50)
+    done = []
+    pool = WorkerPool(q, lambda t: done.append(t.payload["i"]),
+                      num_workers=2, preempt_prob=0.0,
+                      preempt_for=lambda t: 1.0 if t.payload["i"] == 0
+                      else 0.0, seed=0, name="pf")
+    pool.start()
+    q.put_many([Task("train", {"i": i}) for i in range(1, 4)])
+    try:
+        assert _wait_until(lambda: sorted(done) == [1, 2, 3])
+        assert pool.preemptions == 0   # rate-0 tasks never preempt
+        q.put(Task("train", {"i": 0}))  # rate-1.0 task always preempts
+        assert _wait_until(lambda: pool.preemptions >= 1)
+        assert 0 not in done
+    finally:
+        q.close()
+        pool.stop()
+
+
+def test_queue_cancel_drops_pending_keeps_leased():
+    q = TaskQueue()
+    q.put_many([Task("train", {"shard_id": s}) for s in (0, 1, 2, 3)])
+    leased = q.fetch(timeout=0.5)
+    assert leased is not None
+    gone = {1, 3} | {leased.payload["shard_id"]}
+    dropped = q.cancel(lambda t: t.payload["shard_id"] in gone)
+    # the leased task matches the predicate but must survive
+    assert sorted(t.payload["shard_id"] for t in dropped) == \
+        sorted(gone - {leased.payload["shard_id"]})
+    q.complete(leased.task_id, "ok")
+    assert q.stats()["done"] == 1
+    remaining = []
+    while True:
+        t = q.fetch(timeout=0.1)
+        if t is None:
+            break
+        remaining.append(t.payload["shard_id"])
+        q.complete(t.task_id)
+    assert sorted(remaining) == sorted(set(range(4)) - gone)
+
+
+# ---------------------------------------------------------------------
+# FleetController unit semantics (against a stub service)
+# ---------------------------------------------------------------------
+
+class _FakeSvc:
+    def __init__(self, n=10):
+        self.members = set(range(n))
+        self.num_shards = n
+        self._commit_lock = threading.Lock()
+        self._clock_cv = threading.Condition()
+        self._inflight: set = set()
+        self.clock = {i: 0 for i in range(n)}
+        self.queue = TaskQueue()
+        self.rows: list = []
+        self.resizes: list = []
+        outer = self
+
+        class _DB:
+            def write(self, tree, **kw):
+                outer.rows.append(kw)
+
+        class _Ex:
+            def resize_membership(self, m):
+                outer.resizes.append(sorted(m))
+
+        self.db = _DB()
+        self.execs = _Ex()
+
+    def _pump(self):
+        pass
+
+
+def test_fleet_controller_epochs_and_audit():
+    svc = _FakeSvc(4)
+    fleet = FleetController(svc)
+    assert fleet.leave([3, 3, 9]) == [3]       # dedup + unknown ignored
+    assert svc.members == {0, 1, 2} and fleet.epoch == 1
+    assert fleet.leave([3]) == []              # already gone: no epoch
+    assert fleet.epoch == 1
+    assert fleet.join([3, 42]) == [3]          # out-of-range ignored
+    assert svc.members == {0, 1, 2, 3} and fleet.epoch == 2
+    assert [e[1] for e in fleet.events] == ["leave", "join"]
+    assert [r["kind"] for r in svc.rows] == ["fleet", "fleet"]
+    assert svc.rows[-1]["extra"]["members"] == [0, 1, 2, 3]
+    # every epoch change resized executor membership, in order
+    assert svc.resizes == [[0, 1, 2], [0, 1, 2, 3]]
+
+
+def test_kill_fraction_deterministic_and_bounded():
+    picks = []
+    for _ in range(2):
+        svc = _FakeSvc(10)
+        fleet = FleetController(svc)
+        picks.append(fleet.kill_fraction(0.3, seed=7))
+    assert picks[0] == picks[1] and len(picks[0]) == 3   # replayable
+    other = FleetController(_FakeSvc(10)).kill_fraction(0.3, seed=8)
+    assert len(other) == 3
+    # a kill wave can never empty the fleet
+    svc = _FakeSvc(4)
+    fleet = FleetController(svc)
+    fleet.kill_fraction(1.0)
+    assert len(svc.members) == 1
+    assert fleet.kill_fraction(0.0) == []
+
+
+def test_fleet_leave_cancels_pending_tasks():
+    svc = _FakeSvc(4)
+    svc.queue.put_many([Task("train", {"shard_id": s}) for s in range(4)])
+    FleetController(svc).leave([1, 2])
+    stats = svc.queue.stats()
+    assert stats["pending"] == 2
+
+
+# ---------------------------------------------------------------------
+# live service: leave/join mid-run, chaos scenarios
+# ---------------------------------------------------------------------
+
+def test_service_leave_join_mid_run(tiny_cfg, tiny_docs, tiny_base):
+    ds = _tiny_ds(tiny_docs)
+    base, _ = tiny_base
+    key = jax.random.PRNGKey(0)
+    dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=1)
+    with tempfile.TemporaryDirectory() as root:
+        with TrainingService(tiny_cfg, dcfg, ds, ckpt_root=root,
+                             **_service_kwargs(key, base)) as svc:
+            svc.run(1, tau=1)
+            assert svc.fleet.leave([3]) == [3]
+            m = svc.run(1, tau=1)
+            assert m["members"] == [0, 1, 2]
+            assert m["fleet_epoch"] == 1
+            assert svc.clock == {0: 2, 1: 2, 2: 2, 3: 1}
+            # quorums resized: phase 1 applied without shard 3
+            assert svc.execs.shared_exec.quorum == 3
+            assert svc.fleet.join([3]) == [3]
+            m = svc.run(1, tau=1)                 # shard 3 catches up
+            assert m["members"] == [0, 1, 2, 3]
+            assert all(svc.clock[s] == 3 for s in range(4))
+            assert svc.execs.shared_exec.quorum == 4
+            fleet_rows = svc.db.rows(kind="fleet")
+            assert [r.extra["event"] for r in fleet_rows] == \
+                ["leave", "join"]
+            assert np.isfinite(m["mean_loss"])
+
+
+def test_chaos_controller_scripted_scenario(tiny_cfg, tiny_docs,
+                                            tiny_base):
+    """Mid-phase eviction + boundary rejoin, scripted: the run survives,
+    the audit trail records both events, and the fleet heals."""
+    ds = _tiny_ds(tiny_docs)
+    base, _ = tiny_base
+    key = jax.random.PRNGKey(0)
+    dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=1)
+    events = [
+        {"phase": 1, "action": "leave", "shards": [3], "when": "mid"},
+        {"phase": 2, "action": "join", "shards": [3]},
+    ]
+    with tempfile.TemporaryDirectory() as root:
+        with TrainingService(tiny_cfg, dcfg, ds, ckpt_root=root,
+                             **_service_kwargs(key, base,
+                                               num_workers=2)) as svc:
+            chaos = ChaosController(svc, events)
+            out = chaos.run(3, tau=1, timeout=120.0)
+            assert [f["action"] for f in chaos.fired] == ["leave", "join"]
+            assert out["members"] == [0, 1, 2, 3]
+            assert out["fleet_epoch"] == 2
+            assert np.isfinite(out["mean_loss"])
+            # the mid-phase eviction landed while phase 1 was running
+            mid = chaos.fired[0]["phase_clock"]
+            assert min(mid.values()) >= 1
+
+
+def test_chaos_kill_frac_converges_close_to_stable(tiny_cfg, tiny_docs,
+                                                   tiny_base):
+    """The ISSUE acceptance gate in miniature: losing 30% of the fleet
+    mid-run still converges — surviving members' final loss stays close
+    to the stable fleet's (the full gate runs in
+    benchmarks/elastic_fleet.py)."""
+    ds = _tiny_ds(tiny_docs)
+    base, _ = tiny_base
+    key = jax.random.PRNGKey(0)
+    dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=2)
+    with tempfile.TemporaryDirectory() as rA, \
+            tempfile.TemporaryDirectory() as rB:
+        with TrainingService(tiny_cfg, dcfg, ds, ckpt_root=rA,
+                             **_service_kwargs(key, base)) as stable:
+            ms = stable.run(3, tau=2)
+        with TrainingService(tiny_cfg, dcfg, ds, ckpt_root=rB,
+                             **_service_kwargs(key, base)) as lossy:
+            chaos = ChaosController(lossy, [
+                {"phase": 1, "action": "kill_frac", "frac": 0.3,
+                 "when": "mid"}], seed=3)
+            ml = chaos.run(3, tau=2, timeout=180.0)
+        assert len(ml["members"]) == 3          # 30% of 4 -> 1 evicted
+        assert np.isfinite(ml["mean_loss"])
+        # survivors' loss within a few percent of the stable fleet
+        assert abs(ml["mean_loss"] - ms["mean_loss"]) \
+            <= 0.05 * abs(ms["mean_loss"])
+
+
+# ---------------------------------------------------------------------
+# kill-and-resume across a membership epoch change (ISSUE acceptance)
+# ---------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("comm_dtype", ["int8", "int4"])
+def test_membership_epoch_kill_resume_bit_exact(tiny_cfg, tiny_docs,
+                                                tiny_base, comm_dtype):
+    """Killed *after* a membership epoch change — with staggered
+    quantized fragments in the schedule — the resume replays the fleet
+    row at its exact point in the row order and continues bit-identical
+    to an uninterrupted elastic run."""
+    ds = _tiny_ds(tiny_docs)
+    base, _ = tiny_base
+    key = jax.random.PRNGKey(0)
+    dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=2, outer_fragments=3,
+                        fragment_stagger=1, comm_dtype=comm_dtype)
+    with tempfile.TemporaryDirectory() as rA, \
+            tempfile.TemporaryDirectory() as rB:
+        ref = TrainingService(tiny_cfg, dcfg, ds, ckpt_root=rA,
+                              **_service_kwargs(key, base))
+        ref.run(1, tau=2)
+        ref.fleet.leave([3])
+        ref.run(1, tau=2)
+        ref.run(1, tau=2)
+        victim = TrainingService(tiny_cfg, dcfg, ds, ckpt_root=rB,
+                                 **_service_kwargs(key, base))
+        victim.run(1, tau=2)
+        victim.fleet.leave([3])
+        victim.run(1, tau=2)
+        victim.shutdown()                      # "kill"
+        res = TrainingService.resume(tiny_cfg, dcfg, ds, ckpt_root=rB,
+                                     **_service_kwargs(key, base))
+        assert sorted(res.members) == [0, 1, 2]   # epoch replayed
+        assert res.fleet.epoch == 1
+        assert res.execs.shared_exec.quorum == 3
+        assert res.clock == {0: 2, 1: 2, 2: 2, 3: 1}
+        res.run(1, tau=2)
+        _assert_paths_equal(ref, res, exact=True)
+        for k, v in ref.losses.items():
+            assert res.losses.get(k) == v
+        ref.shutdown()
+        res.shutdown()
+
+
+# ---------------------------------------------------------------------
+# transport chaos layer (satellite: MeshTransport failure paths)
+# ---------------------------------------------------------------------
+
+def _payload_for(base, comm_dtype="int8"):
+    delta = _delta(base, 0.013)
+    wire, _, payload = quantize_with_feedback(
+        delta, None, comm_dtype, return_payload=True)
+    return delta, wire, payload
+
+
+def test_fault_injector_deterministic_and_seed_sensitive():
+    rates = dict(drop=0.25, dup=0.15, delay=0.1, corrupt=0.2)
+    grid = [(s, p, i, a) for s in range(3) for p in range(3)
+            for i in range(2) for a in range(4)]
+    a1 = [FaultInjector(seed=5, **rates).action(*k) for k in grid]
+    a2 = [FaultInjector(seed=5, **rates).action(*k) for k in grid]
+    a3 = [FaultInjector(seed=6, **rates).action(*k) for k in grid]
+    assert a1 == a2                 # bit-exact replay per seed
+    assert a1 != a3                 # seed changes the schedule
+    assert set(a1) >= {"drop", "ok"}
+    with pytest.raises(ValueError):
+        FaultInjector(drop=0.7, corrupt=0.4)    # rates past 1.0
+
+
+def test_fault_injector_send_idx_counts_per_shard_phase():
+    inj = FaultInjector()
+    assert [inj.next_send_idx(0, 0) for _ in range(3)] == [0, 1, 2]
+    assert inj.next_send_idx(0, 1) == 0
+    assert inj.next_send_idx(1, 0) == 0
+
+
+def test_retry_backoff_schedule_and_recovery(tiny_base):
+    """Drops retry with exponential backoff and eventually deliver the
+    pristine wire; the sleeps follow the policy exactly."""
+    base, _ = tiny_base
+    wire, payload = _payload_for(base)[1:]
+    sleeps = []
+    t = RetryingTransport(
+        InProcessTransport(),
+        policy=RetryPolicy(retries=8, base=0.01, factor=2.0,
+                           max_delay=0.03),
+        injector=FaultInjector(seed=0, drop=0.45), comm_dtype="int8",
+        sleep=sleeps.append)
+    delivered = [t.ship(s, wire, payload, phase=0) for s in range(6)]
+    assert all(d is wire for d in delivered)    # inproc: by reference
+    st = t.stats
+    assert st["drops"] > 0 and st["retries"] == st["drops"]
+    assert st["sends"] == 6                     # goodput unchanged
+    assert set(sleeps) <= {0.01, 0.02, 0.03}    # min(base*2^k, max)
+
+
+def test_retry_exhaustion_raises_typed_error(tiny_base):
+    base, _ = tiny_base
+    wire, payload = _payload_for(base)[1:]
+    inner = InProcessTransport()
+    t = RetryingTransport(
+        inner, policy=RetryPolicy(retries=2),
+        injector=FaultInjector(seed=0, drop=1.0), comm_dtype="int8",
+        sleep=lambda s: None)
+    with pytest.raises(TransportError) as ei:
+        t.ship(4, wire, payload, phase=7)
+    err = ei.value
+    assert (err.shard, err.phase, err.attempts, err.reason) == \
+        (4, 7, 3, "drop")
+    assert inner.stats["sends"] == 0            # nothing delivered
+    assert t.stats["drops"] == 3
+
+
+def test_mesh_transport_corrupt_drop_failure_paths(tiny_base):
+    """Satellite: the mesh backend under injected drop/corrupt — the
+    decoded fold value stays bitwise equal to the clean quantization,
+    corrupted copies are checksum-rejected and counted as retry
+    overhead, and goodput bytes only count delivered payloads."""
+    base, _ = tiny_base
+    delta, wire, payload = _payload_for(base, "int8")
+    want = fake_quantize(delta, "int8")
+    inner = MeshTransport("int8")
+    t = RetryingTransport(
+        inner, policy=RetryPolicy(retries=16),
+        injector=FaultInjector(seed=2, drop=0.25, corrupt=0.25),
+        comm_dtype="int8", sleep=lambda s: None)
+    n = 8
+    for s in range(n):
+        out = t.ship(s, wire, payload, phase=0)
+        for got, exp in zip(jax.tree_util.tree_leaves(out),
+                            jax.tree_util.tree_leaves(want)):
+            assert jnp.array_equal(got, exp)
+    st = t.stats
+    assert st["sends"] == n                     # goodput: one per report
+    assert st["corruptions"] > 0 and st["drops"] > 0
+    assert st["checksum_rejects"] == st["corruptions"]
+    assert st["retries"] == st["corruptions"] + st["drops"]
+    # burned bytes accounted apart from the delivered payload bytes
+    per_send = st["payload_bytes"] // n
+    assert st["retry_bytes"] == st["corruptions"] * per_send
+    # exhaustion on the mesh path leaves goodput untouched
+    t2 = RetryingTransport(
+        MeshTransport("int8"), policy=RetryPolicy(retries=0),
+        injector=FaultInjector(seed=0, drop=1.0), comm_dtype="int8",
+        sleep=lambda s: None)
+    with pytest.raises(TransportError):
+        t2.ship(0, wire, payload, phase=0)
+    assert t2.inner.stats["sends"] == 0
+
+
+def test_duplicate_delivery_surfaced(tiny_base):
+    base, _ = tiny_base
+    wire, payload = _payload_for(base)[1:]
+    t = RetryingTransport(
+        InProcessTransport(), policy=RetryPolicy(retries=2),
+        injector=FaultInjector(seed=0, dup=1.0), comm_dtype="int8",
+        sleep=lambda s: None)
+    t.ship(0, wire, payload, phase=0)
+    assert t.last["dup"] is True
+    assert t.stats["dups"] == 1 and t.stats["sends"] == 1
+
+
+def test_make_transport_wraps_on_retries_or_faults():
+    assert isinstance(make_transport("inproc"), InProcessTransport)
+    t = make_transport("inproc", retries=3)
+    assert isinstance(t, RetryingTransport) and t.injector is None
+    t = make_transport("mesh", comm_dtype="int8",
+                       faults={"seed": 1, "drop": 0.1})
+    assert isinstance(t, RetryingTransport)
+    assert isinstance(t.inner, MeshTransport)
+    assert t.injector.rates["drop"] == 0.1
+
+
+def test_service_under_transport_faults(tiny_cfg, tiny_docs, tiny_base):
+    """A full service run through a faulty transport: drops/dups/
+    corruptions are absorbed by retry + fold dedup and the run stays
+    bit-exact with the calm-transport run."""
+    ds = _tiny_ds(tiny_docs)
+    base, _ = tiny_base
+    key = jax.random.PRNGKey(0)
+    calm = DiPaCoConfig(levels=(2, 2), inner_steps=1, comm_dtype="int8")
+    noisy = DiPaCoConfig(
+        levels=(2, 2), inner_steps=1, comm_dtype="int8",
+        transport_retries=12,
+        transport_faults={"seed": 3, "drop": 0.2, "dup": 0.15,
+                          "delay": 0.1, "corrupt": 0.1, "delay_s": 0.0})
+    with tempfile.TemporaryDirectory() as rA, \
+            tempfile.TemporaryDirectory() as rB:
+        with TrainingService(tiny_cfg, calm, ds, ckpt_root=rA,
+                             **_service_kwargs(key, base)) as a:
+            ma = a.run(2, tau=1)
+            with TrainingService(tiny_cfg, noisy, ds, ckpt_root=rB,
+                                 **_service_kwargs(key, base)) as b:
+                assert isinstance(b.transport, RetryingTransport)
+                mb = b.run(2, tau=1)
+                _assert_paths_equal(a, b, exact=True)
+        assert ma["mean_loss"] == mb["mean_loss"]
+        st = mb["transport"]
+        assert st["sends"] == 8                  # goodput: 4 shards x 2
+        assert st["drops"] + st["dups"] + st["corruptions"] \
+            + st["delays"] > 0
+
+
+# ---------------------------------------------------------------------
+# bandwidth-aware fragment schedules + leafwise comm pricing
+# ---------------------------------------------------------------------
+
+def test_bandwidth_slots_reference_link_is_canonical(tiny_base):
+    from repro.core.fragments import FragmentSpec
+    base, _ = tiny_base
+    spec = FragmentSpec(base, 3)
+    canon = [fragment_send_slot(f, 1, spec.num_fragments)
+             for f in range(spec.num_fragments)]
+    assert bandwidth_slots(spec, 1) == canon
+    assert bandwidth_slots(spec, 1, bandwidth=1.5,
+                           ref_bandwidth=1.0) == canon
+    slow = bandwidth_slots(spec, 1, "int8", bandwidth=0.25,
+                           ref_bandwidth=1.0)
+    assert sorted(slow) == sorted(canon)        # same slots, re-ranked
+    sizes = [spec.wire_bytes(f, "int8")
+             for f in range(spec.num_fragments)]
+    assert slow[int(np.argmin(sizes))] == 0     # smallest ships first
+
+
+def test_service_shard_slots_honor_profiles(tiny_cfg, tiny_docs,
+                                            tiny_base):
+    ds = _tiny_ds(tiny_docs)
+    base, _ = tiny_base
+    key = jax.random.PRNGKey(0)
+    dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=1, outer_fragments=3,
+                        fragment_stagger=1)
+    profiles = {1: WorkerProfile(bandwidth=0.25),
+                2: WorkerProfile(bandwidth=2.0)}
+    with tempfile.TemporaryDirectory() as root:
+        with TrainingService(tiny_cfg, dcfg, ds, ckpt_root=root,
+                             profiles=profiles,
+                             **_service_kwargs(key, base)) as svc:
+            K = svc.execs.fragments
+            canon = [fragment_send_slot(f, 1, K) for f in range(K)]
+            assert svc._shard_slots(0) == canon     # no profile
+            assert svc._shard_slots(2) == canon     # fast link
+            slow = svc._shard_slots(1)
+            assert sorted(slow) == sorted(canon)
+            sizes = [svc.execs.frag_bytes(1, f, "fp32")
+                     for f in range(K)]
+            assert slow[int(np.argmin(sizes))] == 0
+            # slot tables only bend the schedule, never the math: a
+            # run with heterogeneous links still completes
+            m = svc.run(1, tau=1)
+            assert np.isfinite(m["mean_loss"])
+            assert svc.pending_fragments == []      # run() flushes
+
+
+def test_leafwise_policy_prices_links_honestly(tiny_cfg, tiny_docs,
+                                               tiny_base):
+    ds = _tiny_ds(tiny_docs)
+    base, _ = tiny_base
+    key = jax.random.PRNGKey(0)
+    mk = lambda policy: DiPaCoConfig(           # noqa: E731
+        levels=(2, 2), inner_steps=1, comm_dtype="int8",
+        comm_dtype_policy=policy)
+    with tempfile.TemporaryDirectory() as rA, \
+            tempfile.TemporaryDirectory() as rB:
+        with TrainingService(tiny_cfg, mk("uniform"), ds, ckpt_root=rA,
+                             **_service_kwargs(key, base)) as u:
+            with TrainingService(tiny_cfg, mk("leafwise"), ds,
+                                 ckpt_root=rB,
+                                 **_service_kwargs(key, base)) as lw:
+                bu, bl = u._report_bytes(0), lw._report_bytes(0)
+                assert bu > 0 and bl > 0 and bu != bl
+                assert isinstance(lw._comm_dtype, list)
+                assert {"fp32", "int8"} <= set(lw._comm_dtype)
+                m = lw.run(1, tau=1)
+                assert np.isfinite(m["mean_loss"])
+                row = lw.db.rows(kind="train")[0]
+                assert row.extra["comm_policy"] == "leafwise"
+    # unknown policies are rejected at service build
+    with tempfile.TemporaryDirectory() as r, pytest.raises(ValueError):
+        TrainingService(tiny_cfg,
+                        DiPaCoConfig(comm_dtype_policy="bogus"),
+                        ds, ckpt_root=r,
+                        **_service_kwargs(key, base))
