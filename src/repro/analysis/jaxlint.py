@@ -1,0 +1,429 @@
+"""JAX-tracing-discipline pass (JAX1xx).
+
+Finds the *traced set*: functions decorated with / passed to
+``jax.jit``, ``vmap``, ``pmap``, ``lax.scan``, ``while_loop``,
+``fori_loop``, ``cond``, ``checkpoint`` or ``shard_map`` (plus anything
+annotated ``# analysis: traced``), then propagates reachability through
+in-project calls.  Inside traced bodies it flags
+
+* **JAX101** Python side effects: ``print``/``open``, ``time.*`` clock
+  or sleep reads, stdlib ``random.*`` / ``np.random.*``,
+  ``global``/``nonlocal`` statements;
+* **JAX102** tracer->Python coercions: ``float()/int()/bool()`` on a
+  traced value, and ``if``/``while``/``assert`` branching on one;
+* **JAX103** any ``np.*`` call — on traced values it breaks tracing,
+  on host values it silently bakes constants into the jaxpr;
+* **JAX104** (whole tree) a ``jax.jit``/``jit`` call inside a
+  ``for``/``while`` body — the closure is rebuilt and recompiled per
+  iteration;
+* **JAX105** (benchmarks only) a function reading the wall clock twice
+  or more with no ``block_until_ready`` — it times dispatch, not work.
+
+Taint is origin-based: values born from ``jnp.*``/``jax.*`` calls and
+everything derived from them.  Bare parameters are *not* tainted
+(config scalars dominate real signatures) — the rule catalog in the
+README documents this limit.  ``.shape``/``.dtype``/``.ndim``/``.size``
+are concrete even on tracers and drop taint; an
+``if not isinstance(x, ...Tracer)`` guard marks its body concrete and
+mutes JAX102/JAX103 there.
+
+``src/repro/kernels`` is skipped wholesale: Pallas grids and index
+maps legitimately do host arithmetic inside kernel wrappers.
+"""
+from __future__ import annotations
+
+import ast
+from collections import defaultdict
+
+from . import Finding, Project, SourceModule, attr_chain
+
+TRANSFORMS = {"jit", "vmap", "pmap", "grad", "value_and_grad",
+              "checkpoint", "remat", "scan", "while_loop", "fori_loop",
+              "cond", "shard_map", "custom_vjp", "custom_jvp"}
+JIT_ONLY = {"jit"}
+SHAPE_ATTRS = {"shape", "dtype", "ndim", "size", "name", "sharding"}
+CLOCKS = {"time", "perf_counter", "monotonic", "process_time",
+          "perf_counter_ns", "time_ns"}
+
+
+def _is_transform(func: ast.AST) -> str | None:
+    ch = attr_chain(func)
+    if not ch:
+        return None
+    if ch[-1] in TRANSFORMS and (
+            len(ch) == 1 or ch[0] in ("jax", "lax", "jnp")
+            or ch[-2:-1] == ["lax"]):
+        return ch[-1]
+    return None
+
+
+class JaxLint:
+    def __init__(self, project: Project):
+        self.project = project
+        self.findings: list[Finding] = []
+        # traced worklist entries: (module, funcdef-node, qualname)
+        self.traced: dict[int, tuple] = {}
+        self.scanned: set[int] = set()
+
+    # -- seeds ----------------------------------------------------------
+    def _skip(self, m: SourceModule) -> bool:
+        return m.rel.startswith("src/repro/kernels")
+
+    def _seed_module(self, m: SourceModule) -> None:
+        # local def tables: enclosing function -> {name: def-node}
+        for parent in ast.walk(m.tree):
+            for node in ast.iter_child_nodes(parent):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        base = dec.func if isinstance(dec, ast.Call) \
+                            else dec
+                        tr = _is_transform(base)
+                        if tr is None and isinstance(dec, ast.Call):
+                            # functools.partial(jax.jit, ...)
+                            ch = attr_chain(dec.func)
+                            if ch and ch[-1] == "partial" and dec.args \
+                                    and _is_transform(dec.args[0]):
+                                tr = "partial"
+                        if tr is not None:
+                            self._mark(m, node, self._qual(m, node))
+                    if m.has_directive(node.lineno, "traced"):
+                        self._mark(m, node, self._qual(m, node))
+        # defs/lambdas passed to transform calls
+        local_defs = self._local_defs(m)
+        for node in ast.walk(m.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _is_transform(node.func) is None:
+                continue
+            cands = list(node.args) + [k.value for k in node.keywords]
+            for a in cands:
+                self._mark_callable(m, a, local_defs)
+
+    def _qual(self, m: SourceModule, node: ast.FunctionDef) -> str:
+        for (rel, qual), fi in self.project.functions.items():
+            if rel == m.rel and fi.node is node:
+                return qual
+        return node.name
+
+    def _local_defs(self, m: SourceModule) -> dict[str, tuple]:
+        defs: dict[str, tuple] = {}
+        for parent in ast.walk(m.tree):
+            for node in ast.iter_child_nodes(parent):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    defs.setdefault(node.name, (m, node))
+        return defs
+
+    def _mark_callable(self, m: SourceModule, a: ast.AST,
+                       local_defs: dict) -> None:
+        if isinstance(a, ast.Lambda):
+            self._mark(m, a, "<lambda>")
+        elif isinstance(a, ast.Name):
+            fi = self.project.resolve_name(m, a.id)
+            if fi is not None and not self._skip(fi.module):
+                self._mark(fi.module, fi.node, fi.qualname)
+            else:
+                hit = local_defs.get(a.id)
+                if hit is not None:
+                    self._mark(hit[0], hit[1],
+                               self._qual(hit[0], hit[1]))
+        elif isinstance(a, ast.Attribute):
+            ch = attr_chain(a)
+            if ch and ch[0] == "self" and len(ch) == 2:
+                for (rel, qual), fi in self.project.functions.items():
+                    if rel == m.rel and qual.endswith("." + ch[1]):
+                        self._mark(fi.module, fi.node, fi.qualname)
+
+    def _mark(self, m: SourceModule, node: ast.AST, qual: str) -> None:
+        if self._skip(m) or id(node) in self.traced:
+            return
+        self.traced[id(node)] = (m, node, qual)
+
+    # -- propagation + scanning -----------------------------------------
+    def run(self) -> list[Finding]:
+        mods = [m for m in self.project.modules if not self._skip(m)]
+        for m in mods:
+            self._seed_module(m)
+        # fixpoint: scanning a traced body may mark new functions
+        while True:
+            todo = [v for k, v in self.traced.items()
+                    if k not in self.scanned]
+            if not todo:
+                break
+            for m, node, qual in todo:
+                self.scanned.add(id(node))
+                self._scan_traced(m, node, qual)
+        for m in mods:
+            self._jit_in_loop(m)
+            if m.rel.startswith("benchmarks"):
+                self._bench_clocks(m)
+        out = []
+        for f in self.findings:
+            mod = self.project.module_for(f.path)
+            if mod is not None and mod.is_suppressed(f):
+                continue
+            out.append(f)
+        return out
+
+    # -- traced-body scan ------------------------------------------------
+    def _scan_traced(self, m: SourceModule, fn: ast.AST,
+                     qual: str) -> None:
+        taint: set[str] = set()
+        local_defs = self._local_defs(m)
+
+        def tainted(e: ast.AST) -> bool:
+            if isinstance(e, ast.Name):
+                return e.id in taint
+            if isinstance(e, ast.Attribute):
+                if e.attr in SHAPE_ATTRS:
+                    return False
+                return tainted(e.value)
+            if isinstance(e, ast.Call):
+                ch = attr_chain(e.func)
+                if ch and ch[0] in ("jnp", "jax", "lax"):
+                    return True
+                if isinstance(e.func, ast.Attribute) and \
+                        tainted(e.func.value):
+                    return True
+                return any(tainted(a) for a in e.args) or any(
+                    tainted(k.value) for k in e.keywords)
+            if isinstance(e, (ast.BinOp, ast.BoolOp, ast.UnaryOp,
+                              ast.Compare, ast.IfExp, ast.Tuple,
+                              ast.List, ast.Set, ast.Starred,
+                              ast.Subscript, ast.JoinedStr,
+                              ast.FormattedValue)):
+                return any(tainted(c) for c in ast.iter_child_nodes(e)
+                           if isinstance(c, ast.expr))
+            return False
+
+        def assign_names(t: ast.AST, on: bool) -> None:
+            for n in ast.walk(t):
+                if isinstance(n, ast.Name):
+                    (taint.add if on else taint.discard)(n.id)
+
+        def emit(rule: str, node: ast.AST, detail: str,
+                 msg: str) -> None:
+            self.findings.append(
+                Finding(rule, m.rel, node.lineno, qual, detail, msg))
+
+        def check_call(node: ast.Call, concrete: bool) -> None:
+            ch = attr_chain(node.func)
+            if ch:
+                head, last = ch[0], ch[-1]
+                if head == "np" and len(ch) >= 2 and ch[1] == "random":
+                    emit("JAX101", node, ".".join(ch),
+                         f"`{'.'.join(ch)}` inside a traced body is "
+                         f"baked in at trace time")
+                elif head in ("np", "numpy") and not concrete:
+                    emit("JAX103", node, ".".join(ch),
+                         f"`{'.'.join(ch)}` inside a traced body: "
+                         f"numpy breaks on tracers and silently bakes "
+                         f"constants on host values")
+                elif head == "time" and last in CLOCKS | {"sleep"}:
+                    emit("JAX101", node, f"time.{last}",
+                         f"`time.{last}` inside a traced body runs at "
+                         f"trace time only")
+                elif head == "random" and len(ch) >= 2:
+                    emit("JAX101", node, ".".join(ch),
+                         f"stdlib `{'.'.join(ch)}` inside a traced "
+                         f"body is fixed at trace time; use jax.random")
+                elif len(ch) == 1 and last in ("print", "open"):
+                    emit("JAX101", node, last,
+                         f"`{last}()` inside a traced body runs at "
+                         f"trace time only")
+                elif len(ch) == 1 and last in ("float", "int", "bool") \
+                        and not concrete:
+                    if any(tainted(a) for a in node.args):
+                        emit("JAX102", node, last,
+                             f"`{last}()` on a traced value forces a "
+                             f"concretization error / silent "
+                             f"constant")
+            # in-project propagation
+            fi = None
+            if ch and len(ch) == 1:
+                fi = self.project.resolve_name(m, ch[0])
+                if fi is None:
+                    hit = local_defs.get(ch[0])
+                    if hit is not None:
+                        self._mark(hit[0], hit[1],
+                                   self._qual(hit[0], hit[1]))
+            elif ch and ch[0] == "self" and len(ch) == 2:
+                for (rel, q), f2 in self.project.functions.items():
+                    if rel == m.rel and q.endswith("." + ch[1]) and \
+                            "." in qual and q.split(".")[0] == \
+                            qual.split(".")[0]:
+                        fi = f2
+                        break
+            elif ch and len(ch) == 2:
+                tgt = self.project.imports.get(m.rel, {}).get(ch[0])
+                if tgt and tgt[0] == "mod":
+                    src = self.project.mod_by_dotted.get(tgt[1])
+                    if src is not None:
+                        fi = self.project.functions.get(
+                            (src.rel, ch[1]))
+            if fi is not None and not self._skip(fi.module):
+                self._mark(fi.module, fi.node, fi.qualname)
+
+        def concrete_guard(test: ast.AST):
+            """-> (names, body_concrete, orelse_concrete) for
+            isinstance-Tracer guards, else None."""
+            neg = False
+            t = test
+            if isinstance(t, ast.UnaryOp) and isinstance(t.op, ast.Not):
+                neg, t = True, t.operand
+            if isinstance(t, ast.Call) and isinstance(t.func, ast.Name) \
+                    and t.func.id == "isinstance" and len(t.args) == 2 \
+                    and "Tracer" in ast.dump(t.args[1]):
+                names = [n.id for n in ast.walk(t.args[0])
+                         if isinstance(n, ast.Name)]
+                return (names, neg, not neg)
+            return None
+
+        def walk(stmts, concrete: bool) -> None:
+            for st in stmts:
+                if isinstance(st, (ast.Global, ast.Nonlocal)):
+                    emit("JAX101", st, "nonlocal"
+                         if isinstance(st, ast.Nonlocal) else "global",
+                         "rebinding outer names inside a traced body "
+                         "is a side effect the trace won't replay")
+                elif isinstance(st, ast.Assign):
+                    on = tainted(st.value)
+                    for t in st.targets:
+                        assign_names(t, on)
+                    visit_exprs(st, concrete)
+                elif isinstance(st, ast.AugAssign):
+                    if tainted(st.value) or tainted(st.target):
+                        assign_names(st.target, True)
+                    visit_exprs(st, concrete)
+                elif isinstance(st, ast.If):
+                    guard = concrete_guard(st.test)
+                    if guard is None and tainted(st.test):
+                        emit("JAX102", st, "if",
+                             "`if` on a traced value concretizes the "
+                             "tracer; use lax.cond / jnp.where")
+                    visit_expr(st.test, concrete)
+                    if guard is not None:
+                        names, body_c, orelse_c = guard
+                        saved = set(taint)
+                        taint.difference_update(names)
+                        walk(st.body, concrete or body_c)
+                        taint.clear()
+                        taint.update(saved)
+                        taint.difference_update(names)
+                        walk(st.orelse, concrete or orelse_c)
+                        taint.clear()
+                        taint.update(saved)
+                    else:
+                        walk(st.body, concrete)
+                        walk(st.orelse, concrete)
+                elif isinstance(st, ast.While):
+                    if tainted(st.test):
+                        emit("JAX102", st, "while",
+                             "`while` on a traced value cannot be "
+                             "traced; use lax.while_loop")
+                    visit_expr(st.test, concrete)
+                    walk(st.body, concrete)
+                    walk(st.orelse, concrete)
+                elif isinstance(st, ast.Assert):
+                    if tainted(st.test):
+                        emit("JAX102", st, "assert",
+                             "`assert` on a traced value concretizes "
+                             "the tracer")
+                    visit_expr(st.test, concrete)
+                elif isinstance(st, ast.For):
+                    assign_names(st.target, tainted(st.iter))
+                    visit_expr(st.iter, concrete)
+                    walk(st.body, concrete)
+                    walk(st.orelse, concrete)
+                elif isinstance(st, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    walk(st.body, concrete)   # nested def: traced too
+                elif isinstance(st, ast.With):
+                    for it in st.items:
+                        visit_expr(it.context_expr, concrete)
+                    walk(st.body, concrete)
+                elif isinstance(st, ast.Try):
+                    walk(st.body, concrete)
+                    for h in st.handlers:
+                        walk(h.body, concrete)
+                    walk(st.orelse, concrete)
+                    walk(st.finalbody, concrete)
+                elif isinstance(st, ast.Return) and st.value is not None:
+                    visit_expr(st.value, concrete)
+                else:
+                    visit_exprs(st, concrete)
+
+        def visit_expr(e: ast.AST, concrete: bool) -> None:
+            for node in ast.walk(e):
+                if isinstance(node, ast.Call):
+                    check_call(node, concrete)
+                elif isinstance(node, ast.Lambda):
+                    pass   # body walked via ast.walk anyway
+
+        def visit_exprs(st: ast.AST, concrete: bool) -> None:
+            for e in ast.iter_child_nodes(st):
+                if isinstance(e, ast.expr):
+                    visit_expr(e, concrete)
+
+        body = fn.body if isinstance(fn.body, list) else [
+            ast.Return(value=fn.body, lineno=fn.lineno, col_offset=0)]
+        walk(body, False)
+
+    # -- JAX104: jit built inside a loop --------------------------------
+    def _jit_in_loop(self, m: SourceModule) -> None:
+        for loop in ast.walk(m.tree):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            for node in ast.walk(loop):
+                if isinstance(node, ast.Call):
+                    ch = attr_chain(node.func)
+                    if ch and ch[-1] in JIT_ONLY and (
+                            len(ch) == 1 or ch[0] == "jax"):
+                        self.findings.append(Finding(
+                            "JAX104", m.rel, node.lineno,
+                            self._enclosing(m, node), "jit-in-loop",
+                            "jax.jit called inside a loop rebuilds "
+                            "the closure and recompiles every "
+                            "iteration; hoist it out"))
+
+    # -- JAX105: benchmark clocks without a sync ------------------------
+    def _bench_clocks(self, m: SourceModule) -> None:
+        for parent in ast.walk(m.tree):
+            for fn in ast.iter_child_nodes(parent):
+                if not isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    continue
+                clocks, synced = 0, 0
+                for node in ast.walk(fn):
+                    if (isinstance(node, ast.Attribute)
+                            and node.attr == "block_until_ready") or (
+                            isinstance(node, ast.Name)
+                            and node.id == "block_until_ready"):
+                        synced += 1
+                    if isinstance(node, ast.Call):
+                        cch = attr_chain(node.func)
+                        if cch and cch[0] == "time" and \
+                                cch[-1] in CLOCKS:
+                            clocks += 1
+                if clocks >= 2 and synced == 0:
+                    self.findings.append(Finding(
+                        "JAX105", m.rel, fn.lineno,
+                        self._qual(m, fn), "unsynced-clock",
+                        f"{clocks} wall-clock reads with no "
+                        f"block_until_ready: times dispatch, not "
+                        f"device work"))
+
+    def _enclosing(self, m: SourceModule, node: ast.AST) -> str:
+        best = "<module>"
+        for parent in ast.walk(m.tree):
+            if isinstance(parent, (ast.FunctionDef,
+                                   ast.AsyncFunctionDef)):
+                if parent.lineno <= node.lineno <= (
+                        parent.end_lineno or parent.lineno):
+                    best = self._qual(m, parent)
+        return best
+
+
+def run(project: Project) -> list[Finding]:
+    return JaxLint(project).run()

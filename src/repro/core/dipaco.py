@@ -14,6 +14,7 @@ Special cases (paper §2.6.3 / §4.3):
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -51,7 +52,7 @@ class PhaseMetrics:
     ``extra`` and are reachable by key alongside the dataclass
     fields."""
     mean_loss: float
-    final_loss: float = float("nan")
+    final_loss: float = math.nan
     per_path_loss: Optional[np.ndarray] = None
     extra: dict = field(default_factory=dict)
 

@@ -26,6 +26,7 @@ momentum all fragment identically.
 """
 from __future__ import annotations
 
+import math
 import zlib
 
 import jax
@@ -178,7 +179,7 @@ def _fake_quant_leaf(x, qmax: int):
     return jnp.where(scale > 0, q * scale, jnp.zeros_like(x))
 
 
-def fake_quantize(tree, comm_dtype):
+def fake_quantize(tree, comm_dtype):  # analysis: traced
     """Quantize-dequantize every leaf of ``tree`` — the value the
     receiver reconstructs from the int wire payload.  ``comm_dtype``
     is one dtype name or a per-leaf list (flatten order); fp32 leaves
@@ -234,14 +235,16 @@ def _decode_leaf(payload, qmax: int, pack: bool, shape):
         lo = jnp.where(lo > 7, lo - 16, lo)
         hi = (u >> 4).astype(jnp.int8)
         hi = jnp.where(hi > 7, hi - 16, hi)
-        n = int(np.prod(shape))
+        # math.prod, not np.prod: shapes are static Python tuples and
+        # the decode path may run under jit (jaxlint JAX103)
+        n = math.prod(shape)
         flat = jnp.stack([lo, hi], axis=1).reshape(-1)[:n]
         q = flat.reshape(shape)
     return jnp.where(scale > 0, q.astype(jnp.float32) * scale,
                      jnp.zeros(shape, jnp.float32))
 
 
-def encode_wire(tree, comm_dtype):
+def encode_wire(tree, comm_dtype):  # analysis: traced
     """Encode an fp32 payload tree into its on-the-wire representation:
     the tree with each leaf replaced by ``{"q": int8, "scale": f32[]}``
     (int4 packs two values per ``q`` byte).  fp32 payloads (or fp32
@@ -268,7 +271,7 @@ def _is_wire_leaf(x) -> bool:
     return isinstance(x, dict) and "q" in x
 
 
-def decode_wire(payload, comm_dtype, like):
+def decode_wire(payload, comm_dtype, like):  # analysis: traced
     """Reconstruct the fp32 payload from :func:`encode_wire` output.
     ``like`` supplies leaf shapes (the int4 packing flattens them).
     ``decode_wire(encode_wire(x)) == fake_quantize(x)`` bitwise."""
@@ -304,6 +307,7 @@ def payload_nbytes(payload, comm_dtype) -> int:
         for p in leaves)
 
 
+# analysis: traced
 def quantize_with_feedback(delta, residual, comm_dtype, *,
                            return_payload: bool = False):
     """Encode ``delta`` for the wire with error feedback.

@@ -75,6 +75,7 @@ class ModuleStore:
                 template_params, self._kind)
 
     # ------------------------------------------------------------------
+    # analysis: lockfree(readers see an atomic swap of immutable trees)
     def assemble(self, path_idx: int):
         """Materialize the parameter tree for path ``path_idx``."""
         segs = []
@@ -102,6 +103,7 @@ class ModuleStore:
         return walk(self._kind, self.shared, *segs)
 
     # ------------------------------------------------------------------
+    # analysis: lockfree(readers see an atomic swap of immutable trees)
     def module_params(self, level: int, expert: int):
         return jax.tree_util.tree_map(
             lambda x: None if x is None else x[expert], self.levels[level])
@@ -141,6 +143,7 @@ class ModuleStore:
             lambda leaf, kind: leaf if kind == "shared" else None,
             tree, self._kind)
 
+    # analysis: lockfree(size probe; stale tree reference is fine)
     def num_params(self) -> int:
         n = 0
         for lvl in self.levels:

@@ -305,7 +305,7 @@ class DeploymentRegistry:
         return self.serving()[1]
 
     # -- materialization -----------------------------------------------
-    def _payload(self, ref: ModuleRef):
+    def _payload_locked(self, ref: ModuleRef):
         tree = self._payload_cache.get(ref.digest)
         if tree is not None:
             return tree
@@ -336,7 +336,7 @@ class DeploymentRegistry:
             if cached is not None:
                 return cached
             for ref in m.refs:
-                tree = self._payload(ref)
+                tree = self._payload_locked(ref)
                 if ref.module_id == SHARED_ID:
                     self._store.set_shared(tree)
                 else:

@@ -7,7 +7,7 @@ the membership layer that makes the claim testable:
 ``WorkerProfile``
     Per-worker link/compute/preemption characteristics.  Bandwidth
     drives the bandwidth-aware fragment schedule (slow links ship
-    small fragments first — ``TrainingService._shard_slots``) and the
+    small fragments first — ``TrainingService._shard_slots_locked``) and the
     per-leaf comm-dtype policy prices each link honestly; the
     preemption rate feeds the pool's per-task preemption injection.
 
@@ -120,7 +120,10 @@ class FleetController:
         """Deterministically evict ``frac`` of the current members
         (round-to-nearest, at least one when frac > 0)."""
         svc = self._svc
-        members = sorted(svc.members)
+        # membership changes land under the commit lock; sample from a
+        # consistent snapshot, not a set another thread is resizing
+        with svc._commit_lock:
+            members = sorted(svc.members)
         n = min(len(members) - 1,
                 max(1, round(frac * len(members))) if frac > 0 else 0)
         if n <= 0:
@@ -154,6 +157,7 @@ class FleetController:
         ``TrainingService._restore_from_db`` in row order)."""
         svc = self._svc
         members = set(int(s) for s in row.extra.get("members", []))
+        # analysis: lockfree(resume replay is single-threaded; workers start after restore)
         svc.members = members
         self.epoch = int(row.extra.get("epoch", self.epoch + 1))
         self.events.append((self.epoch, row.extra.get("event", "?"),
@@ -188,7 +192,9 @@ class ChaosController:
         Returns the final ``run`` metrics plus the chaos audit trail."""
         svc = self._svc
         out: dict = {}
-        base = min((svc.clock[s] for s in svc.members), default=0)
+        with svc._commit_lock:
+            base = min((svc.clock[s] for s in sorted(svc.members)),
+                       default=0)
         for p in range(phases):
             phase = base + p
             for ev in self.events:
@@ -204,7 +210,8 @@ class ChaosController:
             self._threads = []
         out["chaos_events"] = list(self.fired)
         out["fleet_epoch"] = svc.fleet.epoch
-        out["members"] = sorted(svc.members)
+        with svc._commit_lock:
+            out["members"] = sorted(svc.members)
         return out
 
     # -- internals ------------------------------------------------------

@@ -269,6 +269,7 @@ class TrainingService:
         p = task.payload
         shard, tau = p["shard_id"], p["tau"]
         t, start_step = p["phase"], p["start_step"]
+        # analysis: lockfree(stale fast-path; recheck under _commit_lock below)
         if (shard, t) in self._phase_done:
             return {"shard": shard, "stale": True}   # retried, already done
         snap = self._snapshots.get(shard)
@@ -278,6 +279,7 @@ class TrainingService:
         # the exact theta the task was issued with, even if executors
         # updated modules since (Algorithm 1 line 4 + idempotence)
         params0 = snap[1]
+        # analysis: lockfree(per-shard slot; only this shard's task touches it between commits)
         opt = self.opt_states[shard]
         if opt is None:
             opt = adamw_init(params0)
@@ -301,6 +303,7 @@ class TrainingService:
             # staleness window and the lag metrics
             time.sleep(min(0.05 * (1.0 / prof.compute - 1.0), 0.5))
         with self._commit_lock:
+            # analysis: lockfree(adds happen in _complete, whose only caller holds _commit_lock too)
             if (shard, t) in self._phase_done:
                 return {"shard": shard, "stale": True}  # lost a retry race
             # wire coding: quantize the outer delta (symmetric int8/int4
@@ -354,7 +357,7 @@ class TrainingService:
                                          policy=self._comm_policy)
                    for f in range(self.execs.fragments))
 
-    def _shard_slots(self, shard: int) -> list:
+    def _shard_slots_locked(self, shard: int) -> list:
         """Per-fragment send slots for this shard's link profile.  The
         reference link (no profile, or bandwidth >= 1.0) keeps the
         canonical ``fragment_send_slot`` schedule exactly — bit-
@@ -393,7 +396,7 @@ class TrainingService:
         makes it a strict no-op, keeping chaos runs bit-exact."""
         self._flush_shard_locked(shard)
         K = self.execs.fragments
-        send_slot = self._shard_slots(shard)
+        send_slot = self._shard_slots_locked(shard)
         slots: dict = {}
         for f in range(K):
             slots.setdefault(send_slot[f], []).append(f)
@@ -535,22 +538,29 @@ class TrainingService:
                         f"queue={self.queue.stats()}")
                 self._clock_cv.wait(timeout=0.1)
         # sync point: fold fragments still in flight from the last
-        # phases (a marker row keeps the resume replay order-faithful)
+        # phases (a marker row keeps the resume replay order-faithful);
+        # losses/comm land under the commit lock, so snapshot them
+        # there too — a straggler committing mid-report must not tear
+        # the metrics dict we hand back
         with self._commit_lock:
             self._flush_all_locked()
+            losses = dict(self.losses)
+            comm = dict(self.comm_stats)
+        with self._clock_cv:
+            max_lag = self.max_observed_lag
         last = target - 1
-        vals = [self.losses[(last, s)] for s in sorted(self.members)
-                if (last, s) in self.losses]
+        vals = [losses[(last, s)] for s in sorted(self.members)
+                if (last, s) in losses]
         mean_loss = float(np.mean(vals)) if vals and target > 0 \
             else float("nan")
         return {"phases": target, "mean_loss": mean_loss,
                 "outer_updates": self.execs.total_updates,
                 "preemptions": self.pool.preemptions,
                 "monitor_restarts": self.monitor.restarts,
-                "max_observed_lag": self.max_observed_lag,
+                "max_observed_lag": max_lag,
                 "members": sorted(self.members),
                 "fleet_epoch": self.fleet.epoch,
-                "comm": dict(self.comm_stats),
+                "comm": comm,
                 "transport": dict(self.transport.stats),
                 "queue": self.queue.stats()}
 
@@ -593,8 +603,8 @@ class TrainingService:
                 self._clock_cv.wait(timeout=0.1)
         with self._commit_lock:
             self._flush_all_locked()   # barrier: no fragment in flight
-        per_path = np.asarray(
-            [self.losses[(self.phase, s)] for s in active])
+            per_path = np.asarray(
+                [self.losses[(self.phase, s)] for s in active])
         mean_loss = float(per_path.mean())
         self.step += tau
         self.phase += 1

@@ -12,6 +12,25 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _lock_trace():
+    """REPRO_LOCK_TRACE=1: record the actual runtime lock-acquisition
+    order for every project lock and, at session end, assert that the
+    union with the static order graph (repro.analysis.locks) is still
+    acyclic.  Off by default — patching threading factories is not
+    something to do silently under every test run."""
+    if os.environ.get("REPRO_LOCK_TRACE") != "1":
+        yield
+        return
+    from repro.analysis.lock_tracer import LockTracer
+    tracer = LockTracer.install()
+    try:
+        yield
+    finally:
+        tracer.uninstall()
+    tracer.check()
+
+
 @pytest.fixture(scope="session")
 def tiny_corpus():
     from repro.data import SyntheticCorpus

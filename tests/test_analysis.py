@@ -1,0 +1,513 @@
+"""The static-analysis suite analyzing itself-sized fixtures: every
+rule must catch its seeded defect (positive) and stay quiet on the
+disciplined twin (negative), the committed baseline must match a fresh
+run of the real tree, and the runtime lock tracer must catch an
+ordering the static pass cannot see."""
+import importlib.util
+import json
+import textwrap
+import threading
+
+import pytest
+
+from repro.analysis import Project
+from repro.analysis import ckpt_schema, jaxlint, locks
+from repro.analysis.__main__ import (load_baseline, main, run_all,
+                                     write_baseline)
+from repro.analysis.lock_tracer import LockTracer, _find_cycle
+
+
+# ---------------------------------------------------------------------
+# fixture plumbing
+# ---------------------------------------------------------------------
+
+def proj(tmp_path, **files):
+    """Build a throwaway project: ``mod="..."`` lands at
+    ``src/repro/mod.py``; ``bench_mod`` at ``benchmarks/mod.py``."""
+    for name, text in files.items():
+        if name.startswith("bench_"):
+            rel = tmp_path / "benchmarks" / (name[6:] + ".py")
+        else:
+            rel = tmp_path / "src" / "repro" / (name + ".py")
+        rel.parent.mkdir(parents=True, exist_ok=True)
+        rel.write_text(textwrap.dedent(text))
+    return Project(tmp_path.resolve())
+
+
+def rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+# ---------------------------------------------------------------------
+# lock pass
+# ---------------------------------------------------------------------
+
+LOCKED_READER = """
+    import threading
+
+    class Box:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.items = []
+
+        def add(self, x):
+            with self._lock:
+                self.items.append(x)
+
+        def size(self):
+            return len(self.items)
+"""
+
+
+def test_lck101_unguarded_read(tmp_path):
+    found = locks.run(proj(tmp_path, box=LOCKED_READER))
+    assert rules(found) == ["LCK101"]
+    assert found[0].detail == "Box.items"
+    assert found[0].scope == "Box.size"
+    assert "read" in found[0].message
+
+
+def test_lck101_negative_when_read_is_locked(tmp_path):
+    fixed = LOCKED_READER.replace(
+        "            return len(self.items)",
+        "            with self._lock:\n"
+        "                return len(self.items)")
+    assert locks.run(proj(tmp_path, box=fixed)) == []
+
+
+def test_lck101_seeded_unguarded_write_majority_rule(tmp_path):
+    found = locks.run(proj(tmp_path, box="""
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.items = []
+
+            def add(self, x):
+                with self._lock:
+                    self.items.append(x)
+
+            def clear(self):
+                with self._lock:
+                    self.items = []
+
+            def smash(self):
+                self.items = [0]
+    """))
+    assert rules(found) == ["LCK101"]
+    assert found[0].scope == "Box.smash"
+    assert "mutated" in found[0].message
+
+
+def test_lck101_lockfree_directive_suppresses(tmp_path):
+    suppressed = LOCKED_READER.replace(
+        "        def size(self):",
+        "        # analysis: lockfree(monotonic len; stale is fine)\n"
+        "        def size(self):")
+    assert locks.run(proj(tmp_path, box=suppressed)) == []
+
+
+def test_lck201_order_cycle(tmp_path):
+    found = locks.run(proj(tmp_path, pair="""
+        import threading
+
+        class Pair:
+            def __init__(self):
+                self._l1 = threading.Lock()
+                self._l2 = threading.Lock()
+
+            def fwd(self):
+                with self._l1:
+                    with self._l2:
+                        pass
+
+            def rev(self):
+                with self._l2:
+                    with self._l1:
+                        pass
+    """))
+    assert rules(found) == ["LCK201"]
+    assert found[0].severity == "error"
+    assert "Pair._l1" in found[0].message and "Pair._l2" in found[0].message
+
+
+def test_lck201_negative_consistent_order(tmp_path):
+    found = locks.run(proj(tmp_path, pair="""
+        import threading
+
+        class Pair:
+            def __init__(self):
+                self._l1 = threading.Lock()
+                self._l2 = threading.Lock()
+
+            def fwd(self):
+                with self._l1:
+                    with self._l2:
+                        pass
+
+            def also_fwd(self):
+                with self._l1:
+                    with self._l2:
+                        pass
+    """))
+    assert found == []
+
+
+def test_lck301_blocking_under_lock(tmp_path):
+    found = locks.run(proj(tmp_path, slow="""
+        import threading
+        import time
+
+        class Slow:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def nap(self):
+                with self._lock:
+                    time.sleep(0.5)
+    """))
+    assert rules(found) == ["LCK301"]
+    assert "time.sleep" in found[0].message
+
+
+def test_lck301_negative_sleep_outside_lock(tmp_path):
+    found = locks.run(proj(tmp_path, slow="""
+        import threading
+        import time
+
+        class Slow:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def nap(self):
+                with self._lock:
+                    pass
+                time.sleep(0.5)
+    """))
+    assert found == []
+
+
+# ---------------------------------------------------------------------
+# jaxlint pass
+# ---------------------------------------------------------------------
+
+def test_jax101_side_effect_in_traced_body(tmp_path):
+    found = jaxlint.run(proj(tmp_path, mod="""
+        import jax
+
+        @jax.jit
+        def f(x):
+            print(x)
+            return x
+    """))
+    assert rules(found) == ["JAX101"]
+
+
+def test_jax102_seeded_tracer_coercion(tmp_path):
+    found = jaxlint.run(proj(tmp_path, mod="""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            y = jnp.sum(x)
+            if float(y) > 0:
+                return y
+            return -y
+    """))
+    assert "JAX102" in rules(found)
+
+
+def test_jax102_negative_isinstance_tracer_guard(tmp_path):
+    found = jaxlint.run(proj(tmp_path, mod="""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            y = jnp.sum(x)
+            if not isinstance(y, jax.core.Tracer):
+                return jnp.asarray(float(y))
+            return y
+    """))
+    assert found == []
+
+
+def test_jax103_numpy_in_traced_body(tmp_path):
+    found = jaxlint.run(proj(tmp_path, mod="""
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return x * np.prod(x.shape)
+    """))
+    assert rules(found) == ["JAX103"]
+
+
+def test_jax103_negative_math_prod(tmp_path):
+    found = jaxlint.run(proj(tmp_path, mod="""
+        import jax
+        import math
+
+        @jax.jit
+        def f(x):
+            return x * math.prod(x.shape)
+    """))
+    assert found == []
+
+
+def test_jax104_jit_rebuilt_in_loop(tmp_path):
+    found = jaxlint.run(proj(tmp_path, mod="""
+        import jax
+
+        def train(steps):
+            out = 0
+            for i in range(steps):
+                step = jax.jit(lambda x: x + 1)
+                out = step(out)
+            return out
+    """))
+    assert rules(found) == ["JAX104"]
+
+
+def test_jax105_bench_clock_without_sync(tmp_path):
+    found = jaxlint.run(proj(tmp_path, bench_speed="""
+        import time
+
+        def bench(fn, x):
+            t0 = time.perf_counter()
+            y = fn(x)
+            return time.perf_counter() - t0, y
+    """))
+    assert rules(found) == ["JAX105"]
+
+
+def test_jax105_negative_with_block_until_ready(tmp_path):
+    found = jaxlint.run(proj(tmp_path, bench_speed="""
+        import time
+
+        def bench(fn, x):
+            t0 = time.perf_counter()
+            y = fn(x).block_until_ready()
+            return time.perf_counter() - t0, y
+    """))
+    assert found == []
+
+
+# ---------------------------------------------------------------------
+# checkpoint-schema pass
+# ---------------------------------------------------------------------
+
+CKPT_BALANCED = """
+    def save(db, tree):
+        db.write(tree, kind="opt")
+
+    def restore_rows(rows):
+        for r in rows:
+            if r.kind == "opt":
+                yield r
+"""
+
+
+def test_ckpt_balanced_schema_is_quiet(tmp_path):
+    assert ckpt_schema.run(proj(tmp_path, ck=CKPT_BALANCED)) == []
+
+
+def test_ckpt201_seeded_unrestorable_kind(tmp_path):
+    seeded = CKPT_BALANCED.replace(
+        'db.write(tree, kind="opt")',
+        'db.write(tree, kind="opt")\n        db.write(tree, kind="aux")')
+    found = ckpt_schema.run(proj(tmp_path, ck=seeded))
+    assert rules(found) == ["CKPT201"]
+    assert found[0].detail == "aux"
+    assert found[0].severity == "error"
+
+
+def test_ckpt202_dead_handler(tmp_path):
+    dead = CKPT_BALANCED.replace(
+        'if r.kind == "opt":',
+        'if r.kind in ("opt", "legacy"):')
+    found = ckpt_schema.run(proj(tmp_path, ck=dead))
+    assert rules(found) == ["CKPT202"]
+    assert found[0].detail == "legacy"
+
+
+# ---------------------------------------------------------------------
+# driver: gate semantics + committed baseline
+# ---------------------------------------------------------------------
+
+def test_gate_fails_on_seeded_defect_then_baseline_accepts(tmp_path,
+                                                           capsys):
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "box.py").write_text(
+        textwrap.dedent(LOCKED_READER))
+    baseline = tmp_path / "analysis" / "baseline.json"
+    argv = ["--root", str(tmp_path), "--baseline", str(baseline)]
+
+    assert main(argv + ["--gate"]) == 1          # new finding: gate red
+    assert main(argv + ["--write-baseline"]) == 0
+    assert main(argv + ["--gate"]) == 0          # accepted: gate green
+
+    # fixing the defect makes the baseline entry stale -> gate red again
+    fixed = textwrap.dedent(LOCKED_READER).replace(
+        "        return len(self.items)",
+        "        with self._lock:\n"
+        "            return len(self.items)")
+    (tmp_path / "src" / "repro" / "box.py").write_text(fixed)
+    assert main(argv + ["--gate"]) == 1
+    assert "STALE" in capsys.readouterr().out
+
+
+def test_gate_json_report_shape(tmp_path, capsys):
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "box.py").write_text(
+        textwrap.dedent(LOCKED_READER))
+    assert main(["--root", str(tmp_path), "--json",
+                 "--baseline", str(tmp_path / "b.json")]) == 0
+    report = json.loads(capsys.readouterr().out)
+    assert report["summary"] == {"LCK101": 1}
+    assert report["new"] == report["findings"][0]["fingerprint"].split(
+        "\n") or len(report["new"]) == 1
+    assert report["findings"][0]["severity"] == "warning"
+
+
+def test_committed_baseline_matches_fresh_run():
+    """Meta-test: the tree must be clean modulo the committed baseline
+    (no unrecorded findings, no rotted entries).  This is the same
+    check the CI gate runs."""
+    import repro.analysis as A
+    root = A.repo_root_default()
+    fresh = {f.fingerprint for f in run_all(root)}
+    committed = {e["fingerprint"]
+                 for e in load_baseline(root / "analysis" / "baseline.json")}
+    assert fresh - committed == set(), "new findings not in baseline"
+    assert committed - fresh == set(), "stale baseline entries"
+
+
+def test_baseline_roundtrip(tmp_path):
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "box.py").write_text(
+        textwrap.dedent(LOCKED_READER))
+    findings = run_all(tmp_path)
+    out = tmp_path / "b.json"
+    write_baseline(out, findings)
+    assert [e["fingerprint"] for e in load_baseline(out)] == \
+        [f.fingerprint for f in findings]
+
+
+# ---------------------------------------------------------------------
+# runtime lock tracer
+# ---------------------------------------------------------------------
+
+TRACED_FIXTURE = """
+    import threading
+
+    class Mini:
+        def __init__(self):
+            self._l1 = threading.Lock()
+            self._l2 = threading.Lock()
+
+        def fwd(self):
+            with self._l1:
+                with self._l2:
+                    pass
+
+        def rev(self):
+            order = [self._l2, self._l1]
+            for lk in order:
+                lk.acquire()
+            for lk in reversed(order):
+                lk.release()
+"""
+
+
+def _load_fixture_module(tmp_path):
+    path = tmp_path / "src" / "repro" / "mini.py"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(TRACED_FIXTURE))
+    spec = importlib.util.spec_from_file_location("mini_lock_fixture", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_tracer_catches_runtime_order_static_misses(tmp_path):
+    root = tmp_path.resolve()
+    mod = _load_fixture_module(tmp_path)
+    # the reverse acquisition hides behind a list, so the static pass
+    # sees only fwd's l1->l2 edge ...
+    lp = locks.LockPass(Project(root))
+    lp.run()
+    assert set(lp.order_graph()) == {("Mini._l1", "Mini._l2")}
+    # ... but the runtime tracer records rev's l2->l1 and trips
+    tracer = LockTracer.install(root)
+    try:
+        m = mod.Mini()
+        m.fwd()
+        m.rev()
+    finally:
+        tracer.uninstall()
+    assert ("Mini._l2", "Mini._l1") in tracer.runtime_edges
+    with pytest.raises(AssertionError, match="lock-order cycle"):
+        tracer.check()
+
+
+def test_tracer_consistent_order_passes(tmp_path):
+    root = tmp_path.resolve()
+    mod = _load_fixture_module(tmp_path)
+    tracer = LockTracer.install(root)
+    try:
+        m = mod.Mini()
+        m.fwd()
+        m.fwd()
+    finally:
+        tracer.uninstall()
+    assert tracer.runtime_edges == {
+        ("Mini._l1", "Mini._l2"): tracer.runtime_edges[
+            ("Mini._l1", "Mini._l2")]}
+    tracer.check()
+
+
+def test_tracer_restores_threading_factories(tmp_path):
+    real = (threading.Lock, threading.RLock, threading.Condition)
+    tracer = LockTracer.install(tmp_path.resolve())
+    tracer.uninstall()
+    assert (threading.Lock, threading.RLock, threading.Condition) == real
+
+
+def test_tracer_reentrant_lock_not_self_edge(tmp_path):
+    path = tmp_path / "src" / "repro" / "re.py"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent("""
+        import threading
+
+        class Re:
+            def __init__(self):
+                self._lock = threading.RLock()
+
+            def outer(self):
+                with self._lock:
+                    self.inner()
+
+            def inner(self):
+                with self._lock:
+                    pass
+    """))
+    spec = importlib.util.spec_from_file_location("re_lock_fixture", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    tracer = LockTracer.install(tmp_path.resolve())
+    try:
+        mod.Re().outer()
+    finally:
+        tracer.uninstall()
+    assert tracer.runtime_edges == {}
+    tracer.check()
+
+
+def test_find_cycle_helper():
+    assert _find_cycle({"a": {"b"}, "b": {"c"}, "c": set()}) is None
+    cyc = _find_cycle({"a": {"b"}, "b": {"a"}})
+    assert cyc is not None and cyc[0] == cyc[-1]

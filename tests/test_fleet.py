@@ -363,6 +363,51 @@ def test_chaos_controller_scripted_scenario(tiny_cfg, tiny_docs,
             assert min(mid.values()) >= 1
 
 
+def test_run_metrics_survive_membership_churn(tiny_cfg, tiny_docs,
+                                              tiny_base):
+    """Regression for the lock-pass findings fixed in this tree:
+    ``run()`` snapshots ``losses``/``comm_stats``/``max_observed_lag``
+    under the commit lock and ``kill_fraction`` samples membership from
+    a locked snapshot.  A thread flipping shard 3's membership while
+    ``run()`` collects metrics must never hit a half-updated member
+    set or a dict that changes size mid-iteration."""
+    ds = _tiny_ds(tiny_docs)
+    base, _ = tiny_base
+    key = jax.random.PRNGKey(0)
+    dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=1)
+    with tempfile.TemporaryDirectory() as root:
+        with TrainingService(tiny_cfg, dcfg, ds, ckpt_root=root,
+                             **_service_kwargs(key, base,
+                                               num_workers=2)) as svc:
+            stop = threading.Event()
+            errs: list = []
+
+            def churn():
+                flip = False
+                while not stop.is_set():
+                    try:
+                        if flip:
+                            svc.fleet.join(range(4))
+                        else:
+                            svc.fleet.kill_fraction(0.25, seed=1)
+                        flip = not flip
+                    except Exception as e:      # pragma: no cover
+                        errs.append(e)
+                        return
+                    time.sleep(0.005)
+
+            t = threading.Thread(target=churn, daemon=True)
+            t.start()
+            try:
+                m = svc.run(3, tau=1, timeout=180.0)
+            finally:
+                stop.set()
+                t.join(timeout=10.0)
+            assert errs == []
+            assert np.isfinite(m["mean_loss"])
+            assert set(m["members"]) <= set(range(4))
+
+
 def test_chaos_kill_frac_converges_close_to_stable(tiny_cfg, tiny_docs,
                                                    tiny_base):
     """The ISSUE acceptance gate in miniature: losing 30% of the fleet
@@ -631,9 +676,9 @@ def test_service_shard_slots_honor_profiles(tiny_cfg, tiny_docs,
                              **_service_kwargs(key, base)) as svc:
             K = svc.execs.fragments
             canon = [fragment_send_slot(f, 1, K) for f in range(K)]
-            assert svc._shard_slots(0) == canon     # no profile
-            assert svc._shard_slots(2) == canon     # fast link
-            slow = svc._shard_slots(1)
+            assert svc._shard_slots_locked(0) == canon     # no profile
+            assert svc._shard_slots_locked(2) == canon     # fast link
+            slow = svc._shard_slots_locked(1)
             assert sorted(slow) == sorted(canon)
             sizes = [svc.execs.frag_bytes(1, f, "fp32")
                      for f in range(K)]
