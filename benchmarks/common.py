@@ -33,12 +33,38 @@ BENCH_DECODE_PATH = "BENCH_decode.json"
 BENCH_TRAIN_PATH = "BENCH_train.json"
 BENCH_DEPLOY_PATH = "BENCH_deploy.json"
 
+# where telemetry traces land; CI points this at its artifacts dir so
+# the chaos/mesh shards upload Perfetto-loadable timelines
+TRACE_DIR_ENV = "REPRO_TRACE_DIR"
 
-def record_bench(section: str, rows, path: str = BENCH_DECODE_PATH) -> None:
+
+def trace_path(suite: str) -> str:
+    """Per-suite telemetry trace path under ``$REPRO_TRACE_DIR``
+    (default ``artifacts/traces``)."""
+    import os
+    d = os.environ.get(TRACE_DIR_ENV) or os.path.join("artifacts",
+                                                      "traces")
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, f"{suite}.trace.jsonl")
+
+
+def make_telemetry(suite: str, **kw):
+    """A fresh :class:`repro.obs.Telemetry` tracing into the suite's
+    trace file (one file per suite per run)."""
+    from repro.obs import Telemetry
+    return Telemetry(trace_path(suite), meta={"suite": suite},
+                     fresh=True, **kw)
+
+
+def record_bench(section: str, rows, path: str = BENCH_DECODE_PATH,
+                 trace: str | None = None) -> None:
     """Merge a benchmark section into the perf-trajectory JSON so future
-    PRs have numbers to regress against."""
+    PRs have numbers to regress against.  ``trace`` stamps every row
+    with the telemetry trace file the numbers came from."""
     import json
     import os
+    if trace is not None:
+        rows = [{**r, "trace": trace} for r in rows]
     data = {}
     if os.path.exists(path):
         try:

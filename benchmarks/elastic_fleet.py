@@ -52,9 +52,10 @@ def _service(s, ds, root, dcfg, **over):
     return TrainingService(s["cfg"], dcfg, ds, ckpt_root=root, **kw)
 
 
-def _stable_row(s, ds, dcfg, phases):
+def _stable_row(s, ds, dcfg, phases, tel):
+    tel.instant("bench.section", section="fleet_stable")
     with tempfile.TemporaryDirectory() as root:
-        with _service(s, ds, root, dcfg) as svc:
+        with _service(s, ds, root, dcfg, telemetry=tel) as svc:
             svc.run(1, tau=2)              # warm the jit out of the timing
             t0 = time.time()
             m = svc.run(phases, tau=2)
@@ -66,9 +67,10 @@ def _stable_row(s, ds, dcfg, phases):
             "members": len(m["members"])}
 
 
-def _loss30_row(s, ds, dcfg, phases, stable_loss):
+def _loss30_row(s, ds, dcfg, phases, stable_loss, tel):
+    tel.instant("bench.section", section="fleet_loss30_recovered")
     with tempfile.TemporaryDirectory() as root:
-        with _service(s, ds, root, dcfg) as svc:
+        with _service(s, ds, root, dcfg, telemetry=tel) as svc:
             svc.run(1, tau=2)
             chaos = ChaosController(svc, [
                 {"phase": 1, "action": "kill_frac", "frac": 0.3,
@@ -99,7 +101,8 @@ def _loss30_row(s, ds, dcfg, phases, stable_loss):
             "outer_updates": m["outer_updates"]}
 
 
-def _flapping_row(s, ds, dcfg, phases, stable_loss):
+def _flapping_row(s, ds, dcfg, phases, stable_loss, tel):
+    tel.instant("bench.section", section="fleet_flapping_faulty")
     noisy = dataclasses.replace(
         dcfg, transport_retries=12,
         transport_faults={"seed": 5, "drop": 0.15, "dup": 0.1,
@@ -110,7 +113,7 @@ def _flapping_row(s, ds, dcfg, phases, stable_loss):
         events.append({"phase": p, "action": "leave", "shards": [3]})
         events.append({"phase": p + 1, "action": "join", "shards": [3]})
     with tempfile.TemporaryDirectory() as root:
-        with _service(s, ds, root, noisy) as svc:
+        with _service(s, ds, root, noisy, telemetry=tel) as svc:
             svc.run(1, tau=2)
             chaos = ChaosController(svc, events)
             t0 = time.time()
@@ -143,12 +146,18 @@ def run(quick: bool = True):
     ds = _dataset(s)
     phases = 4 if quick else 8
     dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=2, comm_dtype="int8")
-    stable = _stable_row(s, ds, dcfg, phases)
-    rows = [stable,
-            _loss30_row(s, ds, dcfg, phases, stable["mean_loss"]),
-            _flapping_row(s, ds, dcfg, phases, stable["mean_loss"])]
+    # one telemetry plane across all three fleets: the whole chaos run
+    # (phases, fragment sends, retries, membership epochs) lands in a
+    # single Perfetto-exportable timeline (CI uploads it)
+    with common.make_telemetry("fleet") as tel:
+        stable = _stable_row(s, ds, dcfg, phases, tel)
+        rows = [stable,
+                _loss30_row(s, ds, dcfg, phases, stable["mean_loss"],
+                            tel),
+                _flapping_row(s, ds, dcfg, phases, stable["mean_loss"],
+                              tel)]
     common.record_bench("elastic_fleet", rows,
-                        path=common.BENCH_TRAIN_PATH)
+                        path=common.BENCH_TRAIN_PATH, trace=tel.path)
     return rows
 
 

@@ -1,0 +1,100 @@
+"""Telemetry plane overhead + trace validity gate.
+
+Runs the same miniature ``TrainingService`` workload twice — tracing
+disabled (the ``NULL`` handle) and tracing enabled (full span/metric
+recording into a JSONL trace) — interleaved min-of-N so both lanes
+share the host's noise.  Gated under ``--smoke``:
+
+- tracing-on phase wall time must stay <= 1.03x tracing-off (the
+  ISSUE acceptance bar: observability must be cheap enough to leave
+  on under chaos runs), and
+- the produced trace must be schema-valid, contain the training-plane
+  span vocabulary, and export to Perfetto ``trace_event`` JSON.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.data import shard_documents
+from repro.infra.service import TrainingService
+from repro.models.config import DiPaCoConfig
+from repro.obs import Telemetry, read_trace, validate_trace
+from repro.obs.perfetto import export_perfetto
+from . import common
+
+_W = 4
+
+
+def _svc(s, ds, root, tel):
+    dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=2)
+    return TrainingService(s["cfg"], dcfg, ds, key=s["key"],
+                           ckpt_root=root, base_params=s["base"],
+                           batch_size=4, peak_lr=1e-3, warmup=10,
+                           total_steps=400, num_workers=2,
+                           telemetry=tel)
+
+
+# analysis: ignore[JAX105](run() returns host floats — every phase is synced before the clock reads)
+def _measure(svc_off, svc_on, reps):
+    """Interleaved min-of-N phase walls: (wall_off, wall_on)."""
+    w_off, w_on = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        svc_off.run(1, tau=2)
+        w_off.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        svc_on.run(1, tau=2)
+        w_on.append(time.perf_counter() - t0)
+    return min(w_off), min(w_on)
+
+
+def run(quick: bool = True):
+    s = common.setup(quick)
+    docs, doms = s["docs"][:256], np.asarray(s["doms"][:256])
+    ds = shard_documents(docs, doms % _W, _W)
+    reps = 5 if quick else 9
+    tpath = common.trace_path("obs")
+    tel = Telemetry(tpath, meta={"suite": "obs"}, fresh=True)
+    with tempfile.TemporaryDirectory() as root_off, \
+            tempfile.TemporaryDirectory() as root_on:
+        with _svc(s, ds, root_off, None) as svc_off, \
+                _svc(s, ds, root_on, tel) as svc_on:
+            svc_off.run(1, tau=2)      # warm the jit out of the timing
+            svc_on.run(1, tau=2)
+            wall_off, wall_on = _measure(svc_off, svc_on, reps)
+    tel.close()
+
+    ratio = wall_on / wall_off
+    # the acceptance gate: full tracing must cost <= 3% phase wall
+    assert ratio <= 1.03, (
+        f"tracing overhead {100 * (ratio - 1):.2f}% > 3% "
+        f"(on {wall_on:.4f}s vs off {wall_off:.4f}s per phase)")
+
+    records, skipped = read_trace(tpath)
+    errors = validate_trace(records)
+    assert not errors, f"trace schema errors: {errors[:5]}"
+    names = {r["name"] for r in records if r.get("k") in ("span", "ev")}
+    required = {"train.phase", "train.fragment_send", "pool.task"}
+    assert required <= names, (
+        f"trace missing spans: {sorted(required - names)}")
+    events, _ = export_perfetto(tpath, tpath.rsplit(".jsonl", 1)[0]
+                                + ".perfetto.json")
+    assert events > 0, "Perfetto export produced no events"
+
+    rows = [{"name": "obs_overhead",
+             "us_per_call": wall_on * 1e6,
+             "wall_on_s": wall_on, "wall_off_s": wall_off,
+             "overhead_ratio": ratio,
+             "trace_records": len(records),
+             "perfetto_events": events}]
+    common.record_bench("obs_overhead", rows,
+                        path=common.BENCH_TRAIN_PATH, trace=tpath)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

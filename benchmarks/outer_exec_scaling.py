@@ -166,23 +166,26 @@ def _streaming_rows(s, quick: bool):
                                   comm_dtype="int8"),
     }
     runs = {}
+    tel = common.make_telemetry("outer_exec")
     for name, over in variants.items():
         dcfg = DiPaCoConfig(levels=(2, 2), inner_steps=2, **over)
+        tel.instant("bench.section", section=f"outer_sync_{name}")
         with tempfile.TemporaryDirectory() as root:
             svc = TrainingService(
                 cfg, dcfg, ds, key=key, ckpt_root=root,
                 base_params=s["base"], batch_size=4, peak_lr=1e-3,
-                warmup=10, total_steps=200, num_workers=1)
+                warmup=10, total_steps=200, num_workers=1,
+                telemetry=tel)
             svc.run(1, tau=2)             # warm the jit out of the timing
             # the warmup phase must not pollute the recorded comms
             # (peak is schedule-determined, but sends/totals are counts)
-            svc.comm_stats.update(peak_sync_bytes=0, total_comm_bytes=0,
-                                  sends=0)
+            svc.reset_comm_stats()
             t0 = time.time()
             m = svc.run(phases, tau=2)
             dt = time.time() - t0
-            runs[name] = (m, dict(svc.comm_stats), dt)
+            runs[name] = (m, m["comm"], dt)
             svc.shutdown()
+    tel.close()
     mb, cb, dtb = runs["burst_fp32"]
     ms, cs, dts = runs["stream_frag4_int8"]
     peak_reduction = cb["peak_sync_bytes"] / max(cs["peak_sync_bytes"], 1)
@@ -340,7 +343,8 @@ def run(quick: bool = True):
     rows += _streaming_rows(s, quick)
     rows += _mesh_lane_rows(quick)
     common.record_bench("outer_exec_async", rows,
-                        path=common.BENCH_TRAIN_PATH)
+                        path=common.BENCH_TRAIN_PATH,
+                        trace=common.trace_path("outer_exec"))
     return rows
 
 

@@ -27,16 +27,17 @@ def _derived(row: dict) -> str:
 # fast, CI-friendly subset exercising the kernel layer, the shared
 # training harness (common.setup), the serving subsystem, the decode
 # hot path, the async training service (async-vs-barrier), the
-# deployment plane (publish/canary/hot-swap) and the elastic-fleet
+# deployment plane (publish/canary/hot-swap), the elastic-fleet
 # chaos gate (30% mid-phase worker loss must stay within 2% of the
-# stable fleet's loss — asserted inside the suite)
+# stable fleet's loss — asserted inside the suite) and the telemetry
+# overhead gate (tracing-on phase wall <= 1.03x tracing-off)
 SMOKE_SUITES = ("kernels", "table2", "serving", "decode", "outer_exec",
-                "deploy", "fleet")
+                "deploy", "fleet", "obs")
 
 # suites whose metrics must additionally be non-zero under --smoke (a
 # zero decode latency / wall-clock / observed-lag / staleness means the
 # measurement broke)
-POSITIVE_SUITES = ("decode", "outer_exec", "deploy")
+POSITIVE_SUITES = ("decode", "outer_exec", "deploy", "obs")
 
 
 def _finite(row: dict) -> bool:
@@ -55,6 +56,40 @@ def _positive(row: dict) -> bool:
                and k not in ZERO_OK_FIELDS)
 
 
+# per-suite headline field for the --smoke summary table: the first of
+# these present in a suite's rows is reported next to its verdict
+_KEY_FIELDS = ("overhead_ratio", "loss_delta_pct", "mean_loss", "ppl",
+               "val_ppl", "p99_us", "p50_us", "tokens_per_s",
+               "us_per_call")
+
+
+def _key_metric(rows) -> str:
+    for field in _KEY_FIELDS:
+        for r in rows:
+            v = r.get(field)
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                return f"{r['name']}.{field}={v:.6g}"
+    return "-"
+
+
+def _smoke_summary(results: dict, failures: list) -> None:
+    """One table: suite, headline metric, gate verdict, plus the trace
+    files the suites produced (what CI uploads for Perfetto)."""
+    print("\nsuite        key metric                               gate")
+    traces = set()
+    for name, rows in results.items():
+        if rows is None:
+            print(f"{name:<12} {'(suite raised)':<40} FAIL")
+            continue
+        bad = any(f.startswith(f"{name}/") or f.startswith(f"{name}:")
+                  for f in failures)
+        print(f"{name:<12} {_key_metric(rows):<40} "
+              f"{'FAIL' if bad else 'PASS'}")
+        traces.update(r["trace"] for r in rows if r.get("trace"))
+    for t in sorted(traces):
+        print(f"trace: {t}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -68,10 +103,10 @@ def main() -> None:
 
     from . import (decode_step_latency, deploy_latency, elastic_fleet,
                    fig8_convergence, fig9_path_scaling, fig11_alternating,
-                   kernels_micro, outer_exec_scaling, roofline,
-                   serving_throughput, sync_vs_diloco, table1_variants,
-                   table2_flatmoe_overfit, table3_eval_routing,
-                   table5_sharding)
+                   kernels_micro, obs_overhead, outer_exec_scaling,
+                   roofline, serving_throughput, sync_vs_diloco,
+                   table1_variants, table2_flatmoe_overfit,
+                   table3_eval_routing, table5_sharding)
     suites = {
         "table1": table1_variants,
         "table2": table2_flatmoe_overfit,
@@ -88,6 +123,7 @@ def main() -> None:
         "serving": serving_throughput,
         "decode": decode_step_latency,
         "deploy": deploy_latency,
+        "obs": obs_overhead,
     }
     if args.smoke:
         suites = {k: suites[k] for k in SMOKE_SUITES}
@@ -100,6 +136,7 @@ def main() -> None:
         suites = {k: v for k, v in suites.items() if k in names}
 
     failures = []
+    results = {}
     print("name,us_per_call,derived")
     for name, mod in suites.items():
         t0 = time.time()
@@ -108,7 +145,9 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             print(f"{name}_FAILED,0,error={type(e).__name__}: {e}")
             failures.append(f"{name}: {type(e).__name__}: {e}")
+            results[name] = None
             continue
+        results[name] = rows
         for r in rows:
             if args.smoke and not _finite(r):
                 failures.append(f"{name}/{r['name']}: non-finite metric")
@@ -119,6 +158,8 @@ def main() -> None:
                   f"{_derived(r)}")
         print(f"# {name} finished in {time.time() - t0:.1f}s",
               file=sys.stderr)
+    if args.smoke:
+        _smoke_summary(results, failures)
     if args.smoke and failures:
         for f in failures:
             print(f"SMOKE FAILURE: {f}", file=sys.stderr)

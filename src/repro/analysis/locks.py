@@ -12,8 +12,11 @@ For every class that creates a ``threading.Lock/RLock/Condition`` in
   ``Class.attr`` lock sites, edges mean "acquired while holding" — and
   reports cycles (**LCK201**, error);
 * flags blocking calls (``join``, ``queue.get``/``fetch``,
-  ``time.sleep``, ``wait_for``, ``block_until_ready``) made while a
-  lock is held (**LCK301**), exempting a condition waiting on itself.
+  ``time.sleep``, ``wait_for``, ``block_until_ready``, ``flush``) made
+  while a lock is held (**LCK301**), exempting a condition waiting on
+  itself.  ``flush`` covers the telemetry plane: draining a trace
+  buffer is file IO and must happen after the subsystem lock is
+  released (emission itself is a lock-free deque append).
 
 Cross-object discipline is tracked two ways: ``self.attr`` types come
 from ``__init__`` (constructor calls and annotated-parameter
@@ -39,7 +42,7 @@ LOCK_CTORS = {"Lock", "RLock", "Condition"}
 LOCKISH_RE = re.compile(r"lock|_cv$|cond", re.I)
 MUTATORS = {"append", "add", "update", "pop", "remove", "discard", "clear",
             "extend", "insert", "setdefault", "appendleft", "popleft"}
-BLOCKING_ATTRS = {"wait_for", "block_until_ready", "fetch"}
+BLOCKING_ATTRS = {"wait_for", "block_until_ready", "fetch", "flush"}
 THREADISH_RE = re.compile(r"thread|worker|proc|monitor|^t$|^th$", re.I)
 EXEMPT_METHODS = {"__init__", "__post_init__", "__del__", "__repr__"}
 

@@ -23,17 +23,20 @@ import json
 import os
 import threading
 
+from repro.obs import as_telemetry
+
 from .manifest import Manifest
 
 
 class Publisher:
     def __init__(self, db, registry, *, gate=None, bake_gate=None,
-                 auto_rollback: bool = True):
+                 auto_rollback: bool = True, telemetry=None):
         self.db = db
         self.registry = registry
         self.gate = gate
         self.bake_gate = bake_gate
         self.auto_rollback = auto_rollback
+        self.tel = as_telemetry(telemetry)
         self.published = 0
         self.rejected = 0
         self.rollbacks = 0
@@ -172,23 +175,34 @@ class Publisher:
     def publish_cycle(self) -> dict:
         """One full cycle: detect -> cut -> canary -> promote (or
         reject) -> bake -> rollback on regression."""
-        with self._cycle_lock:
-            out = {"cut": None, "promoted": None, "rejected": None,
-                   "rolled_back": None, "report": None}
-            prev_cut = self._last_cut_phase
-            m = self.poll()
-            if m is None:
-                return out
-            try:
-                return self._cycle_body(out, m)
-            except BaseException:
-                # crashed mid-cycle (gate error, promote died before the
-                # pointer replace): rewind the cut bookkeeping so the
-                # next cycle re-cuts this phase — register() dedupes to
-                # the same version, so the retry promotes instead of
-                # losing the candidate until the next phase completes
-                self._last_cut_phase = prev_cut
-                raise
+        try:
+            with self._cycle_lock:
+                out = {"cut": None, "promoted": None, "rejected": None,
+                       "rolled_back": None, "report": None}
+                prev_cut = self._last_cut_phase
+                m = self.poll()
+                if m is None:
+                    return out
+                try:
+                    with self.tel.span("deploy.cycle",
+                                       version=m.version) as sp:
+                        out = self._cycle_body(out, m)
+                        sp.set(promoted=out["promoted"],
+                               rejected=out["rejected"],
+                               rolled_back=out["rolled_back"])
+                    return out
+                except BaseException:
+                    # crashed mid-cycle (gate error, promote died
+                    # before the pointer replace): rewind the cut
+                    # bookkeeping so the next cycle re-cuts this phase
+                    # — register() dedupes to the same version, so the
+                    # retry promotes instead of losing the candidate
+                    # until the next phase completes
+                    self._last_cut_phase = prev_cut
+                    raise
+        finally:
+            # trace safe point: outside _cycle_lock (the flush does IO)
+            self.tel.flush()
 
     def _cycle_body(self, out: dict, m: Manifest) -> dict:
         out["cut"] = m.version
@@ -200,22 +214,30 @@ class Publisher:
         if prev is not None and prev == m.version:
             return out
         if self.gate is not None and prev is not None:
-            report = self.gate.evaluate(
-                self.registry.materialize(m.version),
-                self.registry.serving_paths())
+            with self.tel.span("deploy.canary", version=m.version,
+                               stage="canary") as sp:
+                report = self.gate.evaluate(
+                    self.registry.materialize(m.version),
+                    self.registry.serving_paths())
+                sp.set(passed=bool(report.passed))
             out["report"] = report
             if not report.passed:
                 self._quarantine(m.signature)
                 self.rejected += 1
                 out["rejected"] = m.version
+                self.tel.instant("deploy.reject", version=m.version)
                 return out
         self.registry.promote(m.version)
         self.published += 1
         out["promoted"] = m.version
+        self.tel.instant("deploy.promote", version=m.version)
         if self.bake_gate is not None and prev is not None:
-            bake = self.bake_gate.evaluate(
-                self.registry.serving_paths(),
-                self.registry.materialize(prev))
+            with self.tel.span("deploy.canary", version=m.version,
+                               stage="bake") as sp:
+                bake = self.bake_gate.evaluate(
+                    self.registry.serving_paths(),
+                    self.registry.materialize(prev))
+                sp.set(passed=bool(bake.passed))
             out["report"] = bake
             if not bake.passed and self.auto_rollback:
                 self._quarantine(m.signature)
@@ -223,6 +245,7 @@ class Publisher:
                 self.rollbacks += 1
                 out["rolled_back"] = m.version
                 out["promoted"] = None
+                self.tel.instant("deploy.rollback", version=m.version)
         return out
 
     # -- background mode -----------------------------------------------

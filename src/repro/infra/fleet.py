@@ -39,6 +39,8 @@ from dataclasses import dataclass
 
 import jax.numpy as jnp
 
+from repro.obs import NULL
+
 
 @dataclass(frozen=True)
 class WorkerProfile:
@@ -150,6 +152,12 @@ class FleetController:
             extra={"event": action, "shards": [int(s) for s in shards],
                    "members": [int(s) for s in members],
                    "epoch": int(self.epoch), **extra})
+        # getattr: unit tests drive the controller with minimal
+        # service fakes that predate the telemetry handle
+        getattr(svc, "tel", NULL).instant(
+            "fleet.epoch", epoch=int(self.epoch), action=action,
+            shards=[int(s) for s in shards],
+            members=[int(s) for s in members])
         svc.execs.resize_membership(members)
 
     def restore_row(self, row) -> None:
@@ -232,6 +240,9 @@ class ChaosController:
             raise ValueError(f"unknown chaos action {act!r}")
         self.fired.append({"action": act, "applied": got,
                            "phase_clock": dict(svc.clock)})
+        getattr(svc, "tel", NULL).instant(
+            "fleet.chaos", action=act,
+            applied=got if isinstance(got, (int, list)) else list(got))
 
     def _arm_mid(self, ev: dict, phase: int) -> None:
         """Fire ``ev`` right after the first train-row commit of

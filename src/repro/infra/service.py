@@ -35,6 +35,7 @@ from __future__ import annotations
 import itertools
 import threading
 import time
+import warnings
 import weakref
 
 import jax
@@ -52,6 +53,7 @@ from repro.models import api
 from repro.models.config import DiPaCoConfig, ModelConfig
 from repro.optim import adamw_init, adamw_update, cosine_schedule
 from repro.core.dipaco import PhaseMetrics
+from repro.obs import MetricRegistry, as_telemetry
 from .ckpt_db import CheckpointDB, load_tree
 from .fleet import FleetController
 from .outer_executor import ShardedOuterExecutors
@@ -77,7 +79,14 @@ class TrainingService:
                  lease_seconds: float = 120.0,
                  monitor_period: float = 0.05, max_attempts: int = 50,
                  ckpt_retention: int | None = None, profiles=None,
-                 resume: bool = False):
+                 resume: bool = False, telemetry=None):
+        # unified telemetry plane (repro.obs): spans/events into a
+        # crash-safe trace + the metric registry that now owns the
+        # comm accounting.  None -> shared no-op handle, but the
+        # registry always exists so comm stats work untraced.
+        self.tel = as_telemetry(telemetry)
+        self.metrics = (self.tel.metrics if self.tel.metrics is not None
+                        else MetricRegistry())
         self.cfg, self.dcfg = cfg, dcfg
         self.partition = make_partition(dcfg, cfg.pattern_repeats)
         P = self.partition.num_paths
@@ -142,13 +151,18 @@ class TrainingService:
         # in the retry/backoff/fault-injection chaos layer.
         self.transport = make_transport(
             dcfg.transport, comm_dtype=self._comm_dtype,
-            retries=dcfg.transport_retries, faults=dcfg.transport_faults)
+            retries=dcfg.transport_retries, faults=dcfg.transport_faults,
+            telemetry=self.tel)
         self._pending: dict = {i: [] for i in range(W)}   # s -> [(ph, f)]
         self._pending_payload: dict = {}                  # (s, ph) -> wire
         self._pending_count: dict = {}                    # (s, ph) -> refs
         self._qresid: dict = {i: None for i in range(W)}  # error feedback
-        self.comm_stats = {"peak_sync_bytes": 0, "total_comm_bytes": 0,
-                           "sends": 0}
+        # comm accounting lives in the registry: one histogram whose
+        # count/sum/max are the legacy sends/total/peak trio.  Handles
+        # are cached so hot-path recording under _commit_lock never
+        # takes the registry lock (thread-local cells, repro.obs).
+        self._m_send_bytes = self.metrics.histogram("train.comm.send_bytes")
+        self._m_phase_wall = self.metrics.histogram("train.phase.wall_s")
         self.loaders = [ShardLoader(s, batch_size, seed=seed + i)
                         for i, s in enumerate(dataset.shards)]
         self.opt_states: dict = {i: None for i in range(W)}
@@ -200,7 +214,7 @@ class TrainingService:
                                num_workers=num_workers,
                                preempt_prob=preempt_prob,
                                preempt_for=preempt_for, seed=seed,
-                               name="svc")
+                               name="svc", telemetry=self.tel)
         self.monitor = Monitor(self.pool, period=monitor_period)
         self.fleet = FleetController(self)
         self._started = False
@@ -216,6 +230,38 @@ class TrainingService:
         config or the base initialization)."""
         return cls(cfg, dcfg, dataset, key=key, ckpt_root=ckpt_root,
                    resume=True, **kw)
+
+    # -- comm accounting (registry-backed) -----------------------------
+    def _comm_summary(self) -> dict:
+        """The comm numbers ``run()`` reports, rebuilt from the
+        ``train.comm.send_bytes`` histogram (count == sends,
+        sum == total bytes, max == peak send) plus the transport's
+        ``retry_bytes`` — previously tracked but never surfaced."""
+        snap = self.metrics.snapshot("train.comm.send_bytes")
+        vals = snap.get("train.comm.send_bytes", {}).get("values", {})
+        h = vals.get("", {"count": 0, "sum": 0.0, "max": 0})
+        return {"peak_sync_bytes": int(h["max"]),
+                "total_comm_bytes": int(h["sum"]),
+                "sends": int(h["count"]),
+                "retry_bytes": int(
+                    dict(self.transport.stats).get("retry_bytes", 0))}
+
+    @property
+    def comm_stats(self) -> dict:
+        """Deprecated dict view of the comm accounting.  Read
+        ``run()['comm']`` or ``self.metrics.snapshot('train.comm.')``
+        instead; to zero the counters (benchmark warmup boundary) use
+        :meth:`reset_comm_stats` — mutating the returned dict no
+        longer has any effect."""
+        warnings.warn(
+            "TrainingService.comm_stats is deprecated; use "
+            "run()['comm'] / metrics.snapshot('train.comm.') and "
+            "reset_comm_stats()", DeprecationWarning, stacklevel=2)
+        return self._comm_summary()
+
+    def reset_comm_stats(self) -> None:
+        """Zero the comm metrics (e.g. between warmup and measurement)."""
+        self.metrics.reset("train.comm.")
 
     # ------------------------------------------------------------------
     def _phase_fn(self, params, opt_state, batches, lrs):
@@ -247,6 +293,7 @@ class TrainingService:
         self.monitor.stop()
         self.queue.close()
         self.pool.stop()
+        self.tel.flush()
 
     def __enter__(self):
         return self
@@ -286,22 +333,29 @@ class TrainingService:
         # deterministic batches keyed by (shard, phase) — identical to
         # the vectorized trainer's schedule, recomputable after any
         # preemption
-        batches = jnp.asarray(phase_batches(
-            self.loaders[shard].tokens, self.loaders[shard].batch_size,
-            tau, shard, t))
-        lrs = jnp.asarray([self.lr(start_step + k) for k in range(tau)])
-        self.queue.renew_lease(task.task_id)
-        params, opt, losses = self._jit_phase(params0, opt, batches, lrs)
-        delta = jax.tree_util.tree_map(
-            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
-            params0, params)
-        loss = float(np.asarray(losses).mean())
-        prof = self.profiles.get(shard)
-        if prof is not None and prof.compute < 1.0:
-            # heterogeneous compute: a slow machine's phase takes
-            # proportionally longer — real straggler pressure for the
-            # staleness window and the lag metrics
-            time.sleep(min(0.05 * (1.0 / prof.compute - 1.0), 0.5))
+        t_start = time.perf_counter()
+        with self.tel.span("train.phase", shard=shard, phase=t) as sp:
+            batches = jnp.asarray(phase_batches(
+                self.loaders[shard].tokens, self.loaders[shard].batch_size,
+                tau, shard, t))
+            lrs = jnp.asarray([self.lr(start_step + k)
+                               for k in range(tau)])
+            self.queue.renew_lease(task.task_id)
+            params, opt, losses = self._jit_phase(params0, opt, batches,
+                                                  lrs)
+            delta = jax.tree_util.tree_map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                params0, params)
+            loss = float(np.asarray(losses).mean())
+            sp.set(loss=loss)
+            prof = self.profiles.get(shard)
+            if prof is not None and prof.compute < 1.0:
+                # heterogeneous compute: a slow machine's phase takes
+                # proportionally longer — real straggler pressure for
+                # the staleness window and the lag metrics
+                time.sleep(min(0.05 * (1.0 / prof.compute - 1.0), 0.5))
+        self._m_phase_wall.observe(time.perf_counter() - t_start,
+                                   shard=shard)
         with self._commit_lock:
             # analysis: lockfree(adds happen in _complete, whose only caller holds _commit_lock too)
             if (shard, t) in self._phase_done:
@@ -324,7 +378,10 @@ class TrainingService:
             # mesh ships the encoded ``payload`` across a device
             # boundary and decodes it back to the same bits
             try:
-                wire = self.transport.ship(shard, wire, payload, phase=t)
+                with self.tel.span("train.fragment_send", shard=shard,
+                                   phase=t):
+                    wire = self.transport.ship(shard, wire, payload,
+                                               phase=t)
             except Exception:
                 # retry exhaustion (TransportError): nothing was
                 # delivered or recorded as train state — roll the
@@ -406,10 +463,9 @@ class TrainingService:
                 b = sum(self.execs.frag_bytes(shard, f, self._base_dtype,
                                               policy=self._comm_policy)
                         for f in frags)
-                self.comm_stats["sends"] += 1
-                self.comm_stats["total_comm_bytes"] += b
-                self.comm_stats["peak_sync_bytes"] = max(
-                    self.comm_stats["peak_sync_bytes"], b)
+                # one send instant: count/sum/max of this histogram
+                # are the legacy sends/total/peak comm numbers
+                self._m_send_bytes.observe(b)
             if slot == 0:
                 # one call folds the whole slot: the delta is sliced
                 # and flattened once per executor, not once per fragment
@@ -525,18 +581,24 @@ class TrainingService:
         self._ensure_started()
         self._pump()
         deadline = time.time() + timeout
-        with self._clock_cv:
-            # the wait set re-evaluates each pass: shards that leave
-            # the fleet mid-wait stop being waited on (leave() notifies)
-            while any(self.clock[s] < target
-                      for s in sorted(self.members)):
-                if time.time() >= deadline:
-                    raise PhaseTimeoutError(
-                        f"service did not reach phase {target}: "
-                        f"clocks={self.clock} members="
-                        f"{sorted(self.members)} "
-                        f"queue={self.queue.stats()}")
-                self._clock_cv.wait(timeout=0.1)
+        try:
+            with self._clock_cv:
+                # the wait set re-evaluates each pass: shards that
+                # leave the fleet mid-wait stop being waited on
+                # (leave() notifies)
+                while any(self.clock[s] < target
+                          for s in sorted(self.members)):
+                    if time.time() >= deadline:
+                        raise PhaseTimeoutError(
+                            f"service did not reach phase {target}: "
+                            f"clocks={self.clock} members="
+                            f"{sorted(self.members)} "
+                            f"queue={self.queue.stats()}")
+                    self._clock_cv.wait(timeout=0.1)
+        finally:
+            # trace safe point: no subsystem lock held here — a timed-
+            # out (about-to-be-killed) run still lands its spans
+            self.tel.flush()
         # sync point: fold fragments still in flight from the last
         # phases (a marker row keeps the resume replay order-faithful);
         # losses/comm land under the commit lock, so snapshot them
@@ -545,7 +607,7 @@ class TrainingService:
         with self._commit_lock:
             self._flush_all_locked()
             losses = dict(self.losses)
-            comm = dict(self.comm_stats)
+            comm = self._comm_summary()
         with self._clock_cv:
             max_lag = self.max_observed_lag
         last = target - 1
@@ -553,6 +615,8 @@ class TrainingService:
                 if (last, s) in losses]
         mean_loss = float(np.mean(vals)) if vals and target > 0 \
             else float("nan")
+        self.tel.sample_metrics("train.")
+        self.tel.flush()
         return {"phases": target, "mean_loss": mean_loss,
                 "outer_updates": self.execs.total_updates,
                 "preemptions": self.pool.preemptions,
@@ -561,6 +625,7 @@ class TrainingService:
                 "members": sorted(self.members),
                 "fleet_epoch": self.fleet.epoch,
                 "comm": comm,
+                "metrics": self.metrics.flat("train."),
                 "transport": dict(self.transport.stats),
                 "queue": self.queue.stats()}
 
@@ -608,12 +673,18 @@ class TrainingService:
         mean_loss = float(per_path.mean())
         self.step += tau
         self.phase += 1
+        self.tel.flush()
+        # comm + transport stats fold into PhaseMetrics through the
+        # registry snapshot ("metrics"); "transport" stays as a
+        # back-compat mirror of the transport's own dict
         return PhaseMetrics(
             mean_loss=mean_loss, final_loss=mean_loss,
             per_path_loss=per_path,
             extra={"outer_updates": self.execs.total_updates,
                    "preemptions": self.pool.preemptions,
                    "active_paths": active,
+                   "comm": self._comm_summary(),
+                   "metrics": self.metrics.flat("train."),
                    "transport": dict(self.transport.stats),
                    "queue": self.queue.stats()})
 

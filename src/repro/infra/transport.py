@@ -46,20 +46,25 @@ import numpy as np
 
 from repro.core.fragments import (decode_wire, payload_checksum,
                                   payload_nbytes)
+from repro.obs import as_telemetry
 
 TRANSPORTS = ("inproc", "mesh")
 
 
 def make_transport(name: str, *, comm_dtype="fp32", devices=None,
-                   retries: int = 0, faults=None, sleep=None):
+                   retries: int = 0, faults=None, sleep=None,
+                   telemetry=None):
     """Build a transport backend; ``retries > 0`` or a ``faults`` spec
     wraps it in a :class:`RetryingTransport`.  ``faults`` is a mapping
     of :class:`FaultInjector` kwargs (``seed``/``drop``/``dup``/
-    ``delay``/``corrupt``/``delay_s``)."""
+    ``delay``/``corrupt``/``delay_s``).  ``telemetry`` (repro.obs)
+    records ``transport.ship`` spans (mesh) and ``transport.retry``
+    instants (retry layer)."""
     if name == "inproc":
         base = InProcessTransport()
     elif name == "mesh":
-        base = MeshTransport(comm_dtype, devices=devices)
+        base = MeshTransport(comm_dtype, devices=devices,
+                             telemetry=telemetry)
     else:
         raise ValueError(f"transport {name!r} not in {TRANSPORTS}")
     if retries or faults:
@@ -67,6 +72,7 @@ def make_transport(name: str, *, comm_dtype="fp32", devices=None,
         return RetryingTransport(
             base, policy=RetryPolicy(retries=int(retries)),
             injector=injector, comm_dtype=comm_dtype,
+            telemetry=telemetry,
             **({"sleep": sleep} if sleep is not None else {}))
     return base
 
@@ -103,12 +109,13 @@ class MeshTransport:
 
     name = "mesh"
 
-    def __init__(self, comm_dtype, *, devices=None):
+    def __init__(self, comm_dtype, *, devices=None, telemetry=None):
         self.comm_dtype = comm_dtype
         self.devices = list(devices) if devices else jax.devices()
         # executor home = the process-default device, where the module
         # store and the executor windows live
         self.exec_device = self.devices[0]
+        self.tel = as_telemetry(telemetry)
         self._lock = threading.Lock()
         self.stats = {"sends": 0, "payload_bytes": 0, "device_hops": 0}
 
@@ -116,6 +123,10 @@ class MeshTransport:
         return self.devices[shard % len(self.devices)]
 
     def ship(self, shard: int, wire, payload, *, phase=None):
+        with self.tel.span("transport.ship", shard=shard, phase=phase):
+            return self._ship(shard, wire, payload, phase=phase)
+
+    def _ship(self, shard: int, wire, payload, *, phase=None):
         src = self.worker_device(shard)
         # the payload originates on the worker's device ...
         payload = jax.device_put(payload, src)
@@ -249,11 +260,12 @@ class RetryingTransport:
 
     def __init__(self, inner, *, policy: RetryPolicy | None = None,
                  injector: FaultInjector | None = None,
-                 comm_dtype="fp32", sleep=time.sleep):
+                 comm_dtype="fp32", sleep=time.sleep, telemetry=None):
         self.inner = inner
         self.policy = policy or RetryPolicy()
         self.injector = injector
         self.comm_dtype = comm_dtype
+        self.tel = as_telemetry(telemetry)
         self._sleep = sleep
         self._lock = threading.Lock()
         self._stats = {"retries": 0, "retry_bytes": 0, "drops": 0,
@@ -338,5 +350,7 @@ class RetryingTransport:
         with self._lock:
             self._stats["retries"] += 1
         b = self.policy.backoff(attempt)
+        self.tel.instant("transport.retry", shard=shard, phase=phase,
+                         attempt=attempt, reason=reason, backoff_s=b)
         if b:
             self._sleep(b)

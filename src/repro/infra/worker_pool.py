@@ -18,6 +18,8 @@ import time
 import traceback
 from typing import Callable
 
+from repro.obs import as_telemetry
+
 from .task_queue import Task, TaskQueue
 
 
@@ -29,9 +31,10 @@ class WorkerPool:
     def __init__(self, queue: TaskQueue, handler: Callable[[Task], object],
                  *, num_workers: int = 4, preempt_prob: float = 0.0,
                  preempt_for: Callable[[Task], float] | None = None,
-                 seed: int = 0, name: str = "pool"):
+                 seed: int = 0, name: str = "pool", telemetry=None):
         self.queue = queue
         self.handler = handler
+        self.tel = as_telemetry(telemetry)
         self.num_workers = num_workers
         self.preempt_prob = preempt_prob
         # heterogeneous fleets: per-task preemption rate (e.g. from the
@@ -76,8 +79,12 @@ class WorkerPool:
                 if self.rng.random() < p:
                     with self._lock:
                         self.preemptions += 1
+                    self.tel.instant("pool.preempt", worker=wid,
+                                     pool=self.name)
                     raise Preempted(f"worker {wid} preempted")
-                result = self.handler(task)
+                with self.tel.span("pool.task", worker=wid,
+                                   kind=task.kind):
+                    result = self.handler(task)
                 self.queue.complete(task.task_id, result)
                 with self._lock:
                     self.completed += 1
@@ -175,7 +182,11 @@ class Monitor:
             # thread is an intentional shrink, not a death, and the
             # spawn-locked reconcile re-checks the deficit per spawn
             # so a concurrent resize can't be double-counted
-            self.restarts += self.pool._reconcile()
+            n = self.pool._reconcile()
+            self.restarts += n
+            if n:
+                self.pool.tel.instant("pool.restart", n=n,
+                                      pool=self.pool.name)
 
     def start(self):
         self._thread.start()

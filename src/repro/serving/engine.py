@@ -52,6 +52,8 @@ from repro.models import api
 from repro.models.config import ModelConfig
 from repro.models.lm import apply_lm
 
+from repro.obs import as_telemetry
+
 from .cache import SlotArena, StackedSlotArenas
 from .scheduler import Request, RequestState, Scheduler
 
@@ -106,6 +108,8 @@ class EngineOptions:
     registry: Any = None
     cache_len: int = 512
     swap_policy: str = "drain"
+    # telemetry handle (repro.obs.Telemetry) — None = no-op tracing
+    telemetry: Any = None
     # --- ContinuousBatchingEngine only ---------------------------------
     slots_per_path: int = 8
     reroute_every: int = 0
@@ -199,7 +203,7 @@ class _EngineBase:
 
     # legacy kwargs the deprecation shim still accepts on this class
     _OPTION_KEYS = ("router", "route_fn", "feat_params", "registry",
-                    "cache_len", "swap_policy")
+                    "cache_len", "swap_policy", "telemetry")
 
     def __init__(self, cfg: ModelConfig, path_params_list=None, *,
                  options: Optional[EngineOptions] = None, **legacy):
@@ -219,6 +223,7 @@ class _EngineBase:
             self._version = -1
         self.registry = opts.registry
         self.swap_policy = opts.swap_policy
+        self.tel = as_telemetry(opts.telemetry)
         self.paths = path_params_list
         self.router = opts.router
         self.route_fn = opts.route_fn
@@ -283,7 +288,10 @@ class PathServingEngine(_EngineBase):
             return False
         if self.registry.serving_version == self._version:
             return False
+        t0 = time.monotonic_ns()
         self._version, self.paths = self.registry.serving()
+        self.tel.complete_span("serve.swap", t0, policy="drain",
+                               version=self._version)
         return True
 
     def device_state(self):
@@ -390,6 +398,9 @@ class ContinuousBatchingEngine(_EngineBase):
         self.reroute_every = opts.reroute_every
         self.swaps = 0
         self.last_swap_tick = -1
+        # monotonic start of a pending drain-policy swap window (the
+        # serve.swap span runs from first drain tick to install)
+        self._swap_wait_ns = None
         num_paths = len(path_params_list)
         homog = _paths_homogeneous(path_params_list)
         self.stacked = homog if opts.stacked is None else opts.stacked
@@ -519,14 +530,23 @@ class ContinuousBatchingEngine(_EngineBase):
         if version == self._version:
             return False
         if self.swap_policy == "live":
+            t0 = time.monotonic_ns()
             self._install(version, paths)
             self._reprefill_inflight()
+            self.tel.complete_span("serve.swap", t0, policy="live",
+                                   version=version, tick=self.ticks)
             return False
         if self.in_flight:
             # drain: in-flight requests finish on their admitted
             # version; new admissions wait (scheduler backpressure)
+            if self._swap_wait_ns is None:
+                self._swap_wait_ns = time.monotonic_ns()
             return True
+        t0 = self._swap_wait_ns or time.monotonic_ns()
+        self._swap_wait_ns = None
         self._install(version, paths)
+        self.tel.complete_span("serve.swap", t0, policy="drain",
+                               version=version, tick=self.ticks)
         return False
 
     def _prefill_running(self, path: int, tokens):
@@ -658,20 +678,23 @@ class ContinuousBatchingEngine(_EngineBase):
     def step(self, now: float = 0.0) -> List[FinishedRequest]:
         """Advance the engine one tick; returns requests finished now."""
         self.ticks += 1
-        draining = self._poll_swap()
-        self.scheduler.route_arrivals(self._route_prompt)
-        if not draining:
-            admissions = self.scheduler.admissions(
-                {p: a.num_free for p, a in enumerate(self.arenas)})
-            for p, reqs in admissions.items():
-                self._admit(p, reqs, now)
-        elif self.scheduler.pending:
-            # the drain pause is backpressure too: requests are waiting
-            # on the swap, not on slots — count it so the stat reflects
-            # every admission stall an operator would see
-            self.scheduler.stats.backpressure_ticks += 1
-        self._decode_tick()
-        return self._emit_tick(now)
+        with self.tel.span("serve.tick", tick=self.ticks) as sp:
+            draining = self._poll_swap()
+            self.scheduler.route_arrivals(self._route_prompt)
+            if not draining:
+                admissions = self.scheduler.admissions(
+                    {p: a.num_free for p, a in enumerate(self.arenas)})
+                for p, reqs in admissions.items():
+                    self._admit(p, reqs, now)
+            elif self.scheduler.pending:
+                # the drain pause is backpressure too: requests are
+                # waiting on the swap, not on slots — count it so the
+                # stat reflects every admission stall an operator sees
+                self.scheduler.stats.backpressure_ticks += 1
+            self._decode_tick()
+            fins = self._emit_tick(now)
+            sp.set(in_flight=len(self.in_flight), finished=len(fins))
+        return fins
 
     def _admit(self, path: int, reqs: List[Request], now: float) -> None:
         """Prefill admissions.
@@ -688,6 +711,7 @@ class ContinuousBatchingEngine(_EngineBase):
         Fallback: batch-1 exact-length prefill per request (compile
         cache bounded by distinct prompt lengths).
         """
+        self.tel.instant("serve.admit", path=path, n=len(reqs))
         arena = self.arenas[path]
         if not self.bucketed:
             for r in reqs:
@@ -879,4 +903,5 @@ class ContinuousBatchingEngine(_EngineBase):
             else:
                 now += tick_dt
             out.extend(fins)
+        self.tel.flush()   # trace safe point: trace ends with the run
         return out

@@ -171,6 +171,42 @@ def test_lck301_blocking_under_lock(tmp_path):
     assert "time.sleep" in found[0].message
 
 
+def test_lck301_telemetry_flush_under_lock(tmp_path):
+    # draining a trace buffer is file IO: flushing while holding a
+    # subsystem lock serializes the hot path behind the disk
+    found = locks.run(proj(tmp_path, svc="""
+        import threading
+
+        class Svc:
+            def __init__(self, tel):
+                self._lock = threading.Lock()
+                self.tel = tel
+
+            def commit(self):
+                with self._lock:
+                    self.tel.flush()
+    """))
+    assert rules(found) == ["LCK301"]
+    assert "flush" in found[0].message
+
+
+def test_lck301_negative_flush_after_lock(tmp_path):
+    found = locks.run(proj(tmp_path, svc="""
+        import threading
+
+        class Svc:
+            def __init__(self, tel):
+                self._lock = threading.Lock()
+                self.tel = tel
+
+            def commit(self):
+                with self._lock:
+                    pass
+                self.tel.flush()
+    """))
+    assert found == []
+
+
 def test_lck301_negative_sleep_outside_lock(tmp_path):
     found = locks.run(proj(tmp_path, slow="""
         import threading
