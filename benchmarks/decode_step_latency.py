@@ -22,15 +22,15 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import api
-from repro.serving import ContinuousBatchingEngine, Request
+from repro.serving import ContinuousBatchingEngine, EngineOptions, Request
 
 from .common import record_bench
 
 
 def _fill_and_time(cfg, paths, *, stacked, slots, cache_len, prompt_len,
                    warm_ticks, ticks):
-    eng = ContinuousBatchingEngine(cfg, paths, cache_len=cache_len,
-                                   slots_per_path=slots, stacked=stacked)
+    eng = ContinuousBatchingEngine(cfg, paths, options=EngineOptions(
+        cache_len=cache_len, slots_per_path=slots, stacked=stacked))
     num_paths = len(paths)
     counter = iter(range(10_000))
     eng._route_prompt = lambda prompt: next(counter) % num_paths

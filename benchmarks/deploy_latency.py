@@ -34,8 +34,8 @@ from repro.deploy import CanaryGate, DeploymentRegistry, Publisher
 from repro.infra import TrainingService
 from repro.models import api
 from repro.models.config import DiPaCoConfig
-from repro.serving import (ContinuousBatchingEngine, Request,
-                           prefix_hash_router)
+from repro.serving import (ContinuousBatchingEngine, EngineOptions,
+                           Request, prefix_hash_router)
 
 from .common import BENCH_DEPLOY_PATH, record_bench
 
@@ -91,9 +91,10 @@ def run(quick: bool = True):
         pub.bootstrap()
 
         engine = ContinuousBatchingEngine(
-            cfg, registry=registry, cache_len=32, slots_per_path=2,
-            prefill_buckets=(16,), swap_policy="drain",
-            route_fn=prefix_hash_router(num_paths))
+            cfg, options=EngineOptions(
+                registry=registry, cache_len=32, slots_per_path=2,
+                prefill_buckets=(16,), swap_policy="drain",
+                route_fn=prefix_hash_router(num_paths)))
         engine.warmup()
         _drive(engine, make_reqs(1, n_load))        # warm the tick loop
 

@@ -29,10 +29,13 @@ def _derived(row: dict) -> str:
 # hot path, the async training service (async-vs-barrier), the
 # deployment plane (publish/canary/hot-swap), the elastic-fleet
 # chaos gate (30% mid-phase worker loss must stay within 2% of the
-# stable fleet's loss — asserted inside the suite) and the telemetry
-# overhead gate (tracing-on phase wall <= 1.03x tracing-off)
+# stable fleet's loss — asserted inside the suite), the multi-process
+# serving-fleet gate (token identity vs a single engine + adaptive
+# speedup floor + one-promote hot swap — asserted inside the suite)
+# and the telemetry overhead gate (tracing-on phase wall <= 1.03x
+# tracing-off)
 SMOKE_SUITES = ("kernels", "table2", "serving", "decode", "outer_exec",
-                "deploy", "fleet", "obs")
+                "deploy", "fleet", "fleet_serve", "obs")
 
 # suites whose metrics must additionally be non-zero under --smoke (a
 # zero decode latency / wall-clock / observed-lag / staleness means the
@@ -61,6 +64,15 @@ def _positive(row: dict) -> bool:
 _KEY_FIELDS = ("overhead_ratio", "loss_delta_pct", "mean_loss", "ppl",
                "val_ppl", "p99_us", "p50_us", "tokens_per_s",
                "us_per_call")
+
+
+class _Suite:
+    """Adapter for a scenario function living inside another suite
+    module (e.g. serving_throughput.run_fleet) so the harness can treat
+    it like a module with a ``run``."""
+
+    def __init__(self, fn):
+        self.run = fn
 
 
 def _key_metric(rows) -> str:
@@ -121,6 +133,7 @@ def main() -> None:
         "kernels": kernels_micro,
         "roofline": roofline,
         "serving": serving_throughput,
+        "fleet_serve": _Suite(serving_throughput.run_fleet),
         "decode": decode_step_latency,
         "deploy": deploy_latency,
         "obs": obs_overhead,

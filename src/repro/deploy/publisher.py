@@ -129,22 +129,30 @@ class Publisher:
         commit order, so the last row per module is its newest.
 
         With streaming fragment-wise sync a module's update for phase t
-        lands as one row per fragment window; a candidate is cut only
-        at *fragment-complete* versions — a module counts phase t done
-        once every one of its fragments (``num_fragments`` rides on
-        each row) has applied phase >= t, so a half-synced module can
-        never leak into a serving manifest."""
+        lands as one *slice* row per fragment window plus one
+        params-only full row (``extra["full"]``) when the phase
+        completes; a candidate is cut only at *fragment-complete*
+        versions — a module counts phase t done once every one of its
+        fragments (``num_fragments`` rides on each row) has applied
+        phase >= t, so a half-synced module can never leak into a
+        serving manifest.  Only full rows become manifest payloads:
+        slice rows carry a single fragment's leaves and cannot
+        materialize a module (K=1 rows are full by construction)."""
         latest: dict = {}
         frag_phase: dict = {}
         frag_expect: dict = {}
         for r in self.db.rows(kind="module"):
             mid = (r.level, r.expert)
-            latest[mid] = r
+            if r.extra.get("full"):
+                latest[mid] = r     # completeness tracked via slices
+                continue
             fid = r.fragment if r.fragment >= 0 else 0
             ph = int(r.extra.get("frag_phase", r.phase))
             cur = frag_phase.setdefault(mid, {})
             cur[fid] = max(cur.get(fid, -1), ph)
             frag_expect[mid] = int(r.extra.get("num_fragments", 1))
+            if frag_expect[mid] == 1:
+                latest[mid] = r
         completed = -1
         for mid in self.registry.module_ids:
             frags = frag_phase.get(mid)

@@ -312,10 +312,17 @@ class DeploymentRegistry:
         if ref.file is None:
             tree = self._base[ref.module_id]
         else:
-            like = {"params": self._base[ref.module_id],
-                    "momentum": nesterov_init(
-                        _tree32(self._base[ref.module_id]))}
-            tree = load_tree(ref.file, like)["params"]
+            base = self._base[ref.module_id]
+            try:
+                # K>1 phase-complete rows are params-only (the
+                # slice-row write-amplification fix keeps momentum in
+                # the training plane's per-fragment slice rows)
+                tree = load_tree(ref.file, {"params": base})["params"]
+            except ValueError:
+                # classic K=1 full row: params + momentum
+                like = {"params": base,
+                        "momentum": nesterov_init(_tree32(base))}
+                tree = load_tree(ref.file, like)["params"]
             tree = jax.tree_util.tree_map(
                 lambda x: None if x is None else jnp.asarray(x), tree)
         self._payload_cache[ref.digest] = tree

@@ -29,9 +29,17 @@ moment *its* quorum lands — independently of every other fragment and
 module.
 
 With a CheckpointDB attached, each applied fragment update persists a
-``kind="module"`` checkpoint (full module params + momentum + the
-contribution keys the fragment consumed, tagged with the fragment id)
-— the recovery substrate ``TrainingService.resume`` uses.
+``kind="module"`` checkpoint.  With ``fragments=1`` that row is the
+classic full-module record (params + momentum + the contribution keys
+the window consumed).  With K>1 fragments each apply writes a **slice
+row** carrying only its own fragment's param/momentum leaves — writing
+the full module K times per phase was a K× write amplification — plus
+ONE params-only **full row** (``fragment=-1``, ``extra["full"]``) per
+*completed* module phase, which is what the deployment publisher cuts
+manifests from.  ``restore_rows`` reassembles the slices bit-exactly:
+fragments partition the leaves disjointly and a slice is written at
+every apply, so overlaying each fragment's newest slice onto the
+construction template reproduces the exact post-apply state.
 
 Produces updates bit-identical to the vectorized mixing formulation
 (core/diloco.py) — asserted in tests/test_infra.py; the quorum/lagged
@@ -111,6 +119,9 @@ class _ExecutorBase:
                         {i: jnp.zeros(self._leaf_shapes[i], jnp.float32)
                          for i in self.spec.indices[f]})
             for f in range(self.spec.num_fragments)]
+        # newest completed module phase a full (fragment=-1) row was
+        # written for; K=1 modules never write separate full rows
+        self._full_written = -1
         self._reset()
 
     # -- legacy single-window accessors (valid views for fragments=1,
@@ -326,16 +337,59 @@ class _ExecutorBase:
         win.phase = applied_phase + 1
         self._reset_window(win)
         if self.db is not None:
-            level, expert = self._ckpt_id()
+            self._persist_locked(win, cast, applied_phase, consumed)
+
+    def _slice_like(self, win) -> dict:
+        """Template for one fragment's slice row: its param leaves (at
+        store dtype, int8/int4 included) + fp32 momentum leaves."""
+        p_leaves = self.spec.flatten(self._params())
+        return {"params": {i: p_leaves[i] for i in win.indices},
+                "momentum": {i: jnp.zeros(self._leaf_shapes[i],
+                                          jnp.float32)
+                             for i in win.indices}}
+
+    def _persist_locked(self, win, cast, applied_phase, consumed):
+        """Checkpoint one fragment apply.
+
+        K=1: the classic full row (params + momentum), unchanged.  K>1:
+        a params-only full row first when this apply *completes* a
+        module phase (ordering matters — if the full row were written
+        after the slice and the process died between them, resume would
+        mark the phase complete without a publishable payload), then
+        the fragment's slice row.  Per module phase that is
+        K·(P+M)/K + P ≈ P+M+P bytes instead of K·(P+M) — the Θ(K)
+        write amplification the ROADMAP called out.
+        """
+        level, expert = self._ckpt_id()
+        extra = {"consumed": [[int(w), int(t)] for w, t in consumed],
+                 "updates": int(win.updates),
+                 "frag_phase": int(applied_phase),
+                 "num_fragments": int(self.spec.num_fragments)}
+        if self.spec.num_fragments == 1:
             self.db.write(
                 {"params": cast, "momentum": self.mom_state},
                 path_id=-1, phase=applied_phase, step=self.updates,
                 kind="module", level=level, expert=expert,
-                fragment=win.fid,
-                extra={"consumed": [[int(w), int(t)] for w, t in consumed],
-                       "updates": int(win.updates),
-                       "frag_phase": int(applied_phase),
+                fragment=win.fid, extra=extra)
+            return
+        done = min(w.phase for w in self.windows) - 1
+        if done > self._full_written:
+            self.db.write(
+                {"params": cast},
+                path_id=-1, phase=done, step=self.updates,
+                kind="module", level=level, expert=expert,
+                fragment=-1,
+                extra={"full": True, "updates": int(self.updates),
+                       "frag_phase": int(done),
                        "num_fragments": int(self.spec.num_fragments)})
+            self._full_written = done
+        c_leaves = self.spec.flatten(cast)
+        self.db.write(
+            {"params": {i: c_leaves[i] for i in win.indices},
+             "momentum": {i: win.mom[i] for i in win.indices}},
+            path_id=-1, phase=applied_phase, step=self.updates,
+            kind="module", level=level, expert=expert,
+            fragment=win.fid, extra=extra)
 
     def resolve_dtypes(self, policy: str, comm_dtype: str):
         """Per-leaf wire dtypes of this executor's module under a comm
@@ -353,13 +407,33 @@ class _ExecutorBase:
     def restore_rows(self, rows) -> None:
         """Reset to the state right after the last apply each fragment
         recorded.  ``rows`` are this executor's ``kind="module"`` rows
-        in commit order; module params come from the newest row (the
-        store state at its write), each fragment's momentum/phase from
-        its own newest row, and every row's contribution keys are
-        marked consumed so the train-delta replay stays order-faithful."""
+        in commit order, and every row's contribution keys are marked
+        consumed so the train-delta replay stays order-faithful.
+
+        K=1 rows are full (params + momentum): module params come from
+        the newest row, each fragment's momentum/phase from its own
+        newest row.  K>1 rows are per-fragment slices: each fragment's
+        newest slice is overlaid onto the construction template —
+        fragments partition the leaves disjointly and a slice is
+        written at *every* apply, so the overlay is bit-exactly the
+        newest state of every leaf (full rows are publisher payloads
+        and are skipped here)."""
         if not rows:
             return
         with self._lock:
+            if self.spec.num_fragments > 1:
+                self._restore_sliced_locked(rows)
+                return
+            rows = [r for r in rows if not r.extra.get("full")]
+            if not rows:
+                return
+            ks = {int(r.extra.get("num_fragments", 1)) for r in rows}
+            if ks - {1}:
+                raise ValueError(
+                    f"module {self._ckpt_id()}: rows were written with "
+                    f"{sorted(ks)} fragments but this executor runs "
+                    f"with 1 — resume across a fragment-count change "
+                    f"is not supported")
             like = self.ckpt_like()
             cache: dict = {}
 
@@ -391,6 +465,46 @@ class _ExecutorBase:
                 win.updates = int(r.extra.get("updates", r.step))
                 win.early.clear()
                 self._reset_window(win)
+
+    def _restore_sliced_locked(self, rows) -> None:
+        """K>1 resume: overlay each fragment's newest slice row."""
+        ks = {int(r.extra.get("num_fragments", 1)) for r in rows}
+        if ks - {self.spec.num_fragments}:
+            raise ValueError(
+                f"module {self._ckpt_id()}: rows were written with "
+                f"{sorted(ks)} fragments but this executor runs with "
+                f"{self.spec.num_fragments} — resume across a "
+                f"fragment-count change is not supported")
+        latest: dict = {}
+        for r in rows:
+            if r.extra.get("full") or r.fragment < 0:
+                continue   # publisher payload, not resume state
+            if r.fragment >= self.spec.num_fragments:
+                continue
+            latest[r.fragment] = r
+            self.windows[r.fragment].consumed.update(
+                (int(w), int(t)) for w, t in
+                r.extra.get("consumed", []))
+        if not latest:
+            return
+        p_leaves = self.spec.flatten(self._params())
+        new_leaves = list(p_leaves)
+        for fid, r in latest.items():
+            win = self.windows[fid]
+            tree = load_tree(r.file, self._slice_like(win))
+            for i in win.indices:
+                new_leaves[i] = jnp.asarray(tree["params"][i],
+                                            dtype=p_leaves[i].dtype)
+                win.mom[i] = jnp.asarray(tree["momentum"][i])
+            win.phase = int(r.extra.get("frag_phase", r.phase)) + 1
+            win.updates = int(r.extra.get("updates", r.step))
+            win.early.clear()
+            self._reset_window(win)
+        self._write(self.spec.unflatten(new_leaves))
+        # a completed phase restored from slices already has its full
+        # row on disk (written before the completing slice): don't
+        # re-write it on the next apply
+        self._full_written = min(w.phase for w in self.windows) - 1
 
 
 class _ModuleExecutor(_ExecutorBase):

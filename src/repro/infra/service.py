@@ -35,7 +35,6 @@ from __future__ import annotations
 import itertools
 import threading
 import time
-import warnings
 import weakref
 
 import jax
@@ -247,17 +246,15 @@ class TrainingService:
                     dict(self.transport.stats).get("retry_bytes", 0))}
 
     @property
-    def comm_stats(self) -> dict:
-        """Deprecated dict view of the comm accounting.  Read
-        ``run()['comm']`` or ``self.metrics.snapshot('train.comm.')``
-        instead; to zero the counters (benchmark warmup boundary) use
-        :meth:`reset_comm_stats` — mutating the returned dict no
-        longer has any effect."""
-        warnings.warn(
-            "TrainingService.comm_stats is deprecated; use "
-            "run()['comm'] / metrics.snapshot('train.comm.') and "
-            "reset_comm_stats()", DeprecationWarning, stacklevel=2)
-        return self._comm_summary()
+    def comm_stats(self):
+        """REMOVED (deprecated in PR 9).  Read ``run()['comm']`` or
+        ``self.metrics.snapshot('train.comm.')``; zero the counters
+        with :meth:`reset_comm_stats`."""
+        raise AttributeError(
+            "TrainingService.comm_stats was removed (deprecated in "
+            "PR 9); read run()['comm'] or "
+            "metrics.snapshot('train.comm.') instead, and zero the "
+            "counters with reset_comm_stats()")
 
     def reset_comm_stats(self) -> None:
         """Zero the comm metrics (e.g. between warmup and measurement)."""

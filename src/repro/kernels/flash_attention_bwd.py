@@ -31,7 +31,7 @@ NEG_INF = -1e30
 # ---------------------------------------------------------------------------
 def _fwd_lse_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr,
                     acc_scr, *, causal, window, block_q, block_k, nk,
-                    scale):
+                    scale, seq_len=None):
     i = pl.program_id(2)
     j = pl.program_id(3)
 
@@ -48,6 +48,8 @@ def _fwd_lse_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr,
         run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
     if window is not None:
         run = jnp.logical_and(run, k_start + block_k - 1 > q_start - window)
+    if seq_len is not None:          # ragged tail: skip all-padding blocks
+        run = jnp.logical_and(run, k_start < seq_len)
 
     @pl.when(run)
     def _compute():
@@ -65,6 +67,8 @@ def _fwd_lse_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr,
             mask = jnp.logical_and(mask, kpos <= qpos)
         if window is not None:
             mask = jnp.logical_and(mask, kpos > qpos - window)
+        if seq_len is not None:      # padded keys never receive weight
+            mask = jnp.logical_and(mask, kpos < seq_len)
         s = jnp.where(mask, s, NEG_INF)
         m_new = jnp.maximum(m_scr[...], s.max(axis=-1))
         p = jnp.exp(s - m_new[:, None])
@@ -82,14 +86,43 @@ def _fwd_lse_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr,
         lse_ref[0, 0, :] = m_scr[...] + jnp.log(l)
 
 
+def _padded_len(s, block_q, block_k):
+    """Round ``s`` up to a common multiple of both block sizes."""
+    m = math.lcm(block_q, block_k)
+    return -(-s // m) * m
+
+
+def _pad_seq(x, sp):
+    s = x.shape[1]
+    if s == sp:
+        return x
+    return jnp.pad(x, ((0, 0), (0, sp - s)) + ((0, 0),) * (x.ndim - 2))
+
+
 def _fwd_with_lse(q, k, v, *, causal, window, block_q, block_k, interpret):
+    s = q.shape[1]
+    sp = _padded_len(s, block_q, block_k)
+    if sp != s:                      # ragged tail: pad, mask, slice back
+        o, lse = _fwd_with_lse_aligned(
+            _pad_seq(q, sp), _pad_seq(k, sp), _pad_seq(v, sp),
+            causal=causal, window=window, block_q=block_q,
+            block_k=block_k, interpret=interpret, seq_len=s)
+        return o[:, :s], lse[:, :, :s]
+    return _fwd_with_lse_aligned(q, k, v, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interpret)
+
+
+def _fwd_with_lse_aligned(q, k, v, *, causal, window, block_q, block_k,
+                          interpret, seq_len=None):
     b, s, h, d = q.shape
     g = h // k.shape[2]
     nq, nk = s // block_q, s // block_k
     scale = 1.0 / math.sqrt(d)
     kernel = functools.partial(_fwd_lse_kernel, causal=causal,
                                window=window, block_q=block_q,
-                               block_k=block_k, nk=nk, scale=scale)
+                               block_k=block_k, nk=nk, scale=scale,
+                               seq_len=seq_len)
     o, lse = pl.pallas_call(
         kernel,
         grid=(b, h, nq, nk),
@@ -124,7 +157,7 @@ def _fwd_with_lse(q, k, v, *, causal, window, block_q, block_k, interpret):
 # backward kernels
 # ---------------------------------------------------------------------------
 def _recompute_p(q, k, lse_rows, q_start, k_start, *, causal, window,
-                 scale, block_q, block_k):
+                 scale, block_q, block_k, seq_len=None):
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
@@ -136,13 +169,16 @@ def _recompute_p(q, k, lse_rows, q_start, k_start, *, causal, window,
         mask = jnp.logical_and(mask, kpos <= qpos)
     if window is not None:
         mask = jnp.logical_and(mask, kpos > qpos - window)
+    if seq_len is not None:          # ragged tail: padded positions are
+        mask = jnp.logical_and(mask, kpos < seq_len)     # not attended
+        mask = jnp.logical_and(mask, qpos < seq_len)
     s = jnp.where(mask, s, NEG_INF)
     return jnp.exp(s - lse_rows[:, None])
 
 
 def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, delta_ref, lse_ref,
                 dk_ref, dv_ref, dk_scr, dv_scr, *, causal, window,
-                block_q, block_k, nq, g, scale):
+                block_q, block_k, nq, g, scale, seq_len=None):
     j = pl.program_id(2)
     i = pl.program_id(3)
 
@@ -158,6 +194,9 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, delta_ref, lse_ref,
         run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
     if window is not None:
         run = jnp.logical_and(run, k_start + block_k - 1 > q_start - window)
+    if seq_len is not None:          # ragged tail: skip all-padding blocks
+        run = jnp.logical_and(run, k_start < seq_len)
+        run = jnp.logical_and(run, q_start < seq_len)
 
     @pl.when(run)
     def _compute():
@@ -170,7 +209,7 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, delta_ref, lse_ref,
             lse = lse_ref[0, gi, :]
             p = _recompute_p(q, k, lse, q_start, k_start, causal=causal,
                              window=window, scale=scale, block_q=block_q,
-                             block_k=block_k)
+                             block_k=block_k, seq_len=seq_len)
             dv_scr[...] += jax.lax.dot_general(
                 p, do, (((0,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
@@ -188,7 +227,8 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, delta_ref, lse_ref,
 
 
 def _dq_kernel(q_ref, k_ref, v_ref, do_ref, delta_ref, lse_ref, dq_ref,
-               dq_scr, *, causal, window, block_q, block_k, nk, scale):
+               dq_scr, *, causal, window, block_q, block_k, nk, scale,
+               seq_len=None):
     i = pl.program_id(2)
     j = pl.program_id(3)
 
@@ -203,6 +243,9 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, delta_ref, lse_ref, dq_ref,
         run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
     if window is not None:
         run = jnp.logical_and(run, k_start + block_k - 1 > q_start - window)
+    if seq_len is not None:          # ragged tail: skip all-padding blocks
+        run = jnp.logical_and(run, k_start < seq_len)
+        run = jnp.logical_and(run, q_start < seq_len)
 
     @pl.when(run)
     def _compute():
@@ -214,7 +257,7 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, delta_ref, lse_ref, dq_ref,
         lse = lse_ref[0, 0, :]
         p = _recompute_p(q, k, lse, q_start, k_start, causal=causal,
                          window=window, scale=scale, block_q=block_q,
-                         block_k=block_k)
+                         block_k=block_k, seq_len=seq_len)
         dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         ds = p * (dp - delta[:, None]) * scale
@@ -232,6 +275,15 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal, window, block_q,
     b, s, h, d = q.shape
     kh = k.shape[2]
     g = h // kh
+    sp = _padded_len(s, block_q, block_k)
+    seq_len = None
+    if sp != s:                      # ragged tail: pad, mask, slice back.
+        # Padded lse rows are 0 and padded q/do rows are 0, so padded
+        # queries contribute exactly nothing to dK/dV; padded keys are
+        # masked out of every p.  Gradients are sliced back below.
+        q, k, v, o, do = (_pad_seq(x, sp) for x in (q, k, v, o, do))
+        lse = jnp.pad(lse, ((0, 0), (0, 0), (0, sp - s)))
+        seq_len, s = s, sp
     nq, nk = s // block_q, s // block_k
     scale = 1.0 / math.sqrt(d)
     delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
@@ -241,7 +293,7 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal, window, block_q,
     dkv = pl.pallas_call(
         functools.partial(_dkv_kernel, causal=causal, window=window,
                           block_q=block_q, block_k=block_k, nq=nq, g=g,
-                          scale=scale),
+                          scale=scale, seq_len=seq_len),
         grid=(b, kh, nk, nq),
         in_specs=[
             pl.BlockSpec((1, block_q, g, d),
@@ -279,7 +331,7 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal, window, block_q,
     dq = pl.pallas_call(
         functools.partial(_dq_kernel, causal=causal, window=window,
                           block_q=block_q, block_k=block_k, nk=nk,
-                          scale=scale),
+                          scale=scale, seq_len=seq_len),
         grid=(b, h, nq, nk),
         in_specs=[
             pl.BlockSpec((1, block_q, 1, d),
@@ -299,6 +351,8 @@ def flash_attention_bwd(q, k, v, o, lse, do, *, causal, window, block_q,
         scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
         interpret=interpret,
     )(q, k, v, do, delta, lse)
+    if seq_len is not None:
+        return dq[:, :seq_len], dk[:, :seq_len], dv[:, :seq_len]
     return dq, dk, dv
 
 

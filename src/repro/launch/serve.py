@@ -14,6 +14,12 @@
     PYTHONPATH=src python -m repro.launch.serve --engine continuous \
         --deploy-root /tmp/dipaco_deploy --levels 2x2 \
         --swap-policy drain
+
+    # multi-process serving fleet behind the path-affinity front door
+    # (requires --deploy-root: members rendezvous on the registry's
+    # SERVING pointer, so one promote hot-swaps the whole fleet)
+    PYTHONPATH=src python -m repro.launch.serve --fleet 2 \
+        --deploy-root /tmp/dipaco_deploy --levels 2x2
 """
 from __future__ import annotations
 
@@ -61,6 +67,14 @@ def main() -> None:
                     default="drain",
                     help="hot-swap pinning policy when the registry's "
                          "serving version moves mid-trace")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve through a fleet of N engines behind the "
+                         "path-affinity front door (requires "
+                         "--deploy-root)")
+    ap.add_argument("--fleet-backend", choices=["process", "inproc"],
+                    default="process",
+                    help="fleet members as OS processes (default) or "
+                         "in this process (debugging)")
     args = ap.parse_args()
     engine_kind = "continuous" if args.continuous else args.engine
 
@@ -92,6 +106,35 @@ def main() -> None:
                          cache_len=cache_len, slots_per_path=args.slots,
                          reroute_every=args.reroute_every,
                          route_fn=prefix_hash_router(num_paths))
+    if args.fleet:
+        if registry is None:
+            ap.error("--fleet requires --deploy-root (fleet members "
+                     "rendezvous on the registry's SERVING pointer)")
+        from repro.serving import ServingFleet
+        trace = poisson_trace(args.requests, rate=args.rate,
+                              prompt_lens=[args.prompt_len],
+                              max_new=args.max_new,
+                              vocab_size=cfg.vocab_size, seed=0,
+                              corpus=corpus)
+        t0 = time.time()
+        with ServingFleet(cfg, size=args.fleet, options=opts,
+                          backend=args.fleet_backend,
+                          seed=args.seed) as fleet:
+            fins = fleet.serve_trace(trace)
+            versions = fleet.versions()
+            stats = dict(fleet.stats)
+        dt = time.time() - t0
+        toks = args.requests * args.max_new
+        lat = sorted(f.latency for f in fins)
+        print(f"[serve] fleet of {args.fleet} ({args.fleet_backend}): "
+              f"{toks} tokens in {dt:.2f}s ({toks / dt:.1f} tok/s), "
+              f"p50 latency {lat[len(lat) // 2] * 1e3:.0f}ms, "
+              f"routed={stats['routed']} "
+              f"rebalances={stats['rebalances']}")
+        print(f"[serve] member versions {versions}")
+        print(f"[serve] request->path: "
+              f"{[f.path for f in fins]}")
+        return
     if engine_kind == "continuous":
         engine = ContinuousBatchingEngine(cfg, paths, options=opts)
         trace = poisson_trace(args.requests, rate=args.rate,

@@ -36,6 +36,10 @@ Span/event name vocabulary (``plane.component``):
 ``serve.tick``          one continuous-batching engine step
 ``serve.swap``          engine hot-swap window (drain start→install)
 ``serve.admit``         instant: request admitted to a slot
+``serve.preempt``       instant: high-priority admit evicted a
+                        preemptible slot (evictee re-queues)
+``serve.route``         instant: fleet front door dispatched a request
+``serve.rebalance``     instant: fleet recomputed per-path replicas
 ======================  ============================================
 """
 

@@ -1,6 +1,9 @@
-from .cache import SlotArena, SlotExhausted, StackedSlotArenas
+from .cache import PrefixCache, SlotArena, SlotExhausted, \
+    StackedSlotArenas
 from .engine import (ContinuousBatchingEngine, EngineOptions,
                      FinishedRequest, GenerationResult,
                      PathServingEngine)
-from .scheduler import (Request, Scheduler, poisson_trace,
+from .fleet import ServingFleet
+from .scheduler import (PRIO_HIGH, PRIO_PREEMPTIBLE, PRIO_STANDARD,
+                        Request, Scheduler, poisson_trace,
                         prefix_hash_router)

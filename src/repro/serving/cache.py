@@ -11,8 +11,21 @@ Stale rows need no zeroing: the attention mask only admits ring entries
 whose reconstructed absolute position is in ``[0, current position]``,
 and a prefill overwrites positions ``0..S-1`` of its row, so a freshly
 allocated slot can never attend a previous occupant's keys.
+
+:class:`PrefixCache` adds cross-request reuse on top of the arenas:
+prefill KV rows are remembered content-keyed by
+``(path, version, prompt tokens)`` so a repeated prompt — or one whose
+prefix another request already prefills — skips (part of) its prefill
+forward.  Reuse is exact-by-construction for full-prompt hits (the
+stored row and next-token logits came from an identical forward) and
+greedy-token-identical for prefix extensions (single-token replay is
+the same §2.4.3 re-prefill primitive the token-identity matrix pins
+against one-forward prefill).
 """
 from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -101,6 +114,76 @@ class SlotArena:
     def decode_indices(self) -> np.ndarray:
         """(num_slots,) per-row cache_index vector for a decode tick."""
         return self.positions.copy()
+
+
+class PrefixCache:
+    """Content-keyed cross-request reuse of prefill KV rows.
+
+    Entries map ``(path, version, tokens)`` to a single-slot cache
+    pytree (leaves ``(reps, 1, ...)`` — one arena row) plus the
+    next-token logits that forward produced.  ``lookup`` returns the
+    longest usable entry: the exact prompt when present, else the
+    longest *strict* prefix (the engine replays the remaining tokens
+    through single-row decode steps — a fixed (1, 1) shape, so the
+    whole extension machinery costs one jit entry).
+
+    LRU-bounded by entry count; versioned keys plus an explicit
+    :meth:`invalidate` on hot swap keep a superseded deployment's rows
+    from ever being served (and from pinning its buffers).
+    """
+
+    def __init__(self, max_entries: int):
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, "
+                             f"got {max_entries}")
+        self.max_entries = max_entries
+        self._entries: OrderedDict = OrderedDict()
+        self.hits = 0          # exact full-prompt reuse
+        self.extensions = 0    # strict-prefix reuse + replay
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @staticmethod
+    def _key(path: int, version: int, tokens) -> tuple:
+        return (int(path), int(version), tuple(int(t) for t in tokens))
+
+    def put(self, path: int, version: int, tokens, row_cache,
+            logits) -> None:
+        key = self._key(path, version, tokens)
+        self._entries.pop(key, None)
+        self._entries[key] = (row_cache, np.asarray(logits))
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+
+    def lookup(self, path: int, version: int,
+               tokens) -> Optional[Tuple[int, object, np.ndarray]]:
+        """Longest usable entry for ``tokens``: ``(n_cached, row_cache,
+        logits)`` with ``n_cached == len(tokens)`` for an exact hit, a
+        shorter strict prefix otherwise; None on miss.  Prefix probing
+        walks backwards from the full prompt so the first find is the
+        longest (prompts are short relative to cache_len; the probe is
+        host-side tuple hashing)."""
+        toks = tuple(int(t) for t in tokens)
+        for n in range(len(toks), 0, -1):
+            key = (int(path), int(version), toks[:n])
+            hit = self._entries.get(key)
+            if hit is None:
+                continue
+            self._entries.move_to_end(key)
+            if n == len(toks):
+                self.hits += 1
+            else:
+                self.extensions += 1
+            return n, hit[0], hit[1]
+        self.misses += 1
+        return None
+
+    def invalidate(self) -> None:
+        """Drop every entry (hot swap: a new version's keys never match
+        old entries, but keeping them would pin superseded buffers)."""
+        self._entries.clear()
 
 
 class StackedSlotArenas:

@@ -40,8 +40,7 @@ per-request pinning policy is chosen at construction:
 from __future__ import annotations
 
 import time
-import warnings
-from dataclasses import dataclass, fields
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -54,8 +53,9 @@ from repro.models.lm import apply_lm
 
 from repro.obs import as_telemetry
 
-from .cache import SlotArena, StackedSlotArenas
-from .scheduler import Request, RequestState, Scheduler
+from .cache import PrefixCache, SlotArena, StackedSlotArenas
+from .scheduler import (PRIO_HIGH, PRIO_PREEMPTIBLE, Request,
+                        RequestState, Scheduler)
 
 
 def _paths_homogeneous(path_params_list) -> bool:
@@ -98,8 +98,9 @@ class EngineOptions:
 
     The continuous-batching-only fields (``slots_per_path`` onward) are
     accepted and ignored by the one-shot engine, so one options object
-    can configure either engine.  Passing the old per-kwarg form still
-    works for this release but emits a :class:`DeprecationWarning`.
+    can configure either engine.  (The PR-6-era loose-kwarg
+    construction form is gone: engines reject unknown keyword
+    arguments with a TypeError pointing here.)
     """
 
     router: Any = None
@@ -116,6 +117,11 @@ class EngineOptions:
     stacked: Optional[bool] = None
     bucketed_prefill: Optional[bool] = None
     prefill_buckets: Optional[tuple] = None
+    # cross-request prefix cache capacity (entries); 0 = disabled
+    prefix_cache: int = 0
+    # allow a queued PRIO_HIGH admit to evict a PRIO_PREEMPTIBLE slot
+    # (the evictee re-queues and re-admits via §2.4.3 re-prefill)
+    preemption: bool = True
 
     def __post_init__(self):
         if self.router is not None and self.route_fn is not None:
@@ -140,32 +146,23 @@ class EngineOptions:
                 raise ValueError(
                     f"prefill_buckets {self.prefill_buckets} must lie "
                     f"in [1, cache_len={self.cache_len}]")
+        if self.prefix_cache < 0:
+            raise ValueError(f"prefix_cache must be >= 0, "
+                             f"got {self.prefix_cache}")
 
 
-def _resolve_options(options, legacy, allowed):
-    """Fold legacy per-kwarg engine construction into an EngineOptions.
-
-    Deprecation shim for one release: explicit old-style kwargs still
-    work (with a warning) but cannot be mixed with ``options=``.
-    """
-    unknown = sorted(set(legacy) - set(allowed))
-    if unknown:
-        raise TypeError(f"unknown engine option(s): {unknown}; "
-                        f"valid: {sorted(allowed)}")
-    used = {k: v for k, v in legacy.items() if v is not None}
-    if options is not None:
-        if used:
-            raise ValueError(
-                f"pass options=EngineOptions(...) or the legacy kwargs "
-                f"{sorted(used)} — not both")
-        return options
-    if used:
-        warnings.warn(
-            "constructing a serving engine from loose keyword arguments "
-            "is deprecated; pass options=EngineOptions(...) instead "
-            "(the per-kwarg form is removed next release)",
-            DeprecationWarning, stacklevel=3)
-    return EngineOptions(**used)
+def _resolve_options(options, legacy):
+    """The PR-6 loose-kwarg deprecation shim expired: engines take
+    ``options=EngineOptions(...)`` only, and any stray keyword argument
+    fails loudly with the replacement spelled out."""
+    if legacy:
+        raise TypeError(
+            f"serving engines no longer accept loose keyword arguments "
+            f"{sorted(legacy)} (the per-kwarg construction form was "
+            f"deprecated in PR 6 and has been removed); pass "
+            f"options=EngineOptions({', '.join(sorted(legacy))}, ...) "
+            f"instead")
+    return options if options is not None else EngineOptions()
 
 
 @dataclass
@@ -187,6 +184,8 @@ class FinishedRequest:
     first_token_at: float = 0.0
     version: int = -1           # registry version the request finished on
     swapped_midstream: bool = False   # a live hot-swap hit this request
+    priority: int = 1
+    preemptions: int = 0        # times a high-priority admit evicted it
 
     @property
     def latency(self) -> float:
@@ -194,22 +193,19 @@ class FinishedRequest:
 
     @property
     def ttft(self) -> float:
-        """Time to first generated token."""
-        return self.first_token_at - self.arrival
+        """Time to first generated token, measured from the request's
+        trace arrival (queue wait included); non-trace runs submit with
+        ``arrival == 0.0`` and anchor at admission instead."""
+        return self.first_token_at - (self.arrival or self.admitted_at)
 
 
 class _EngineBase:
     """Shared routing / feature / registry plumbing."""
 
-    # legacy kwargs the deprecation shim still accepts on this class
-    _OPTION_KEYS = ("router", "route_fn", "feat_params", "registry",
-                    "cache_len", "swap_policy", "telemetry")
-
     def __init__(self, cfg: ModelConfig, path_params_list=None, *,
                  options: Optional[EngineOptions] = None, **legacy):
         self.cfg = cfg
-        opts = _resolve_options(options, legacy,
-                                type(self)._OPTION_KEYS)
+        opts = _resolve_options(options, legacy)
         self.options = opts
         if opts.registry is not None:
             if path_params_list is not None:
@@ -383,10 +379,6 @@ class ContinuousBatchingEngine(_EngineBase):
     would absorb pad tokens).
     """
 
-    # the continuous engine accepts every EngineOptions field as a
-    # legacy kwarg (the base only its shared subset)
-    _OPTION_KEYS = tuple(f.name for f in fields(EngineOptions))
-
     def __init__(self, cfg: ModelConfig, path_params_list=None, *,
                  options: Optional[EngineOptions] = None, **legacy):
         super().__init__(cfg, path_params_list, options=options,
@@ -438,6 +430,17 @@ class ContinuousBatchingEngine(_EngineBase):
         self.scheduler = Scheduler(num_paths)
         self.in_flight: Dict[int, RequestState] = {}
         self.ticks = 0
+        self.preemption = opts.preemption
+        # rid -> RequestState evicted by a high-priority admit; restored
+        # (new slot + §2.4.3 re-prefill of the running text) when the
+        # scheduler re-admits the request
+        self._preempted: Dict[int, RequestState] = {}
+        self.prefix_cache = (PrefixCache(opts.prefix_cache)
+                             if opts.prefix_cache else None)
+        # states whose first token was emitted this tick — realtime
+        # serve_trace re-stamps their first_token_at after the step's
+        # device work completes, so TTFT includes that tick's compute
+        self._new_first: list = []
         cfg_ = cfg
 
         @jax.jit
@@ -459,6 +462,16 @@ class ContinuousBatchingEngine(_EngineBase):
             return lg, cache
 
         self._prefill_bucketed = _prefill_bucketed
+
+        def _extend_one(params, tok, cache, idx):
+            logits, cache = api.serve_step(params, cfg_, {"tokens": tok},
+                                           cache, idx)
+            return logits[:, 0], cache
+
+        # prefix-cache extension: replay an uncached prompt tail into a
+        # stored single-slot row — fixed (1, 1) token shape, so the
+        # whole extension machinery costs one jit entry
+        self._extend = jax.jit(_extend_one, donate_argnums=2)
 
         def _decode_one(params, tok, cache, idx, mask):
             logits, new_cache = api.serve_step(
@@ -518,6 +531,8 @@ class ContinuousBatchingEngine(_EngineBase):
         self._version = version
         self.swaps += 1
         self.last_swap_tick = self.ticks
+        if self.prefix_cache is not None:
+            self.prefix_cache.invalidate()
 
     def _poll_swap(self) -> bool:
         """Install a new serving version if the registry moved; returns
@@ -682,19 +697,93 @@ class ContinuousBatchingEngine(_EngineBase):
             draining = self._poll_swap()
             self.scheduler.route_arrivals(self._route_prompt)
             if not draining:
+                if self.preemption:
+                    self._preempt_tick()
                 admissions = self.scheduler.admissions(
                     {p: a.num_free for p, a in enumerate(self.arenas)})
                 for p, reqs in admissions.items():
                     self._admit(p, reqs, now)
             elif self.scheduler.pending:
                 # the drain pause is backpressure too: requests are
-                # waiting on the swap, not on slots — count it so the
-                # stat reflects every admission stall an operator sees
-                self.scheduler.stats.backpressure_ticks += 1
+                # waiting on the swap, not on slots — count every
+                # queued request starved by the stall
+                self.scheduler.drain_backpressure()
             self._decode_tick()
             fins = self._emit_tick(now)
             sp.set(in_flight=len(self.in_flight), finished=len(fins))
         return fins
+
+    def _preempt_tick(self) -> None:
+        """Evict PRIO_PREEMPTIBLE slots for queued PRIO_HIGH admits.
+
+        Per island: when more high-priority requests wait than slots are
+        free, the least-progressed preemptible occupants (least decode
+        work lost) release their slots.  An evictee re-queues at the
+        head of its class and re-admits through the §2.4.3 re-prefill
+        migration path as soon as its island frees a slot again, so its
+        greedy continuation is token-identical to an uninterrupted run.
+        """
+        for p, arena in enumerate(self.arenas):
+            need = self.scheduler.queued(p, PRIO_HIGH) - arena.num_free
+            if need <= 0:
+                continue
+            victims = sorted(
+                (st for st in self.in_flight.values()
+                 if st.path == p
+                 and st.req.priority == PRIO_PREEMPTIBLE),
+                key=lambda st: st.emitted)
+            for st in victims[:need]:
+                arena.free(st.slot)
+                del self.in_flight[st.req.rid]
+                st.preemptions += 1
+                st.next_logits = None
+                st.prefilled_this_tick = False
+                self._preempted[st.req.rid] = st
+                self.scheduler.requeue(st.req, p)
+                self.scheduler.stats.preemptions += 1
+                self.tel.instant("serve.preempt", path=p, rid=st.req.rid,
+                                 emitted=st.emitted)
+
+    def _prefix_admit(self, path: int, r: Request, arena,
+                      now: float) -> bool:
+        """Admit ``r`` from the cross-request prefix cache when (a
+        prefix of) its prompt is cached under the current version.
+
+        Exact hits write the stored row + logits — bit-exact, both came
+        from an identical prefill forward.  Prefix hits replay only the
+        uncached tail through single-row decode steps (the same replay
+        primitive the token-identity matrix pins against one-forward
+        prefill) and promote the extended row to a full-prompt entry.
+        """
+        if self.prefix_cache is None:
+            return False
+        hit = self.prefix_cache.lookup(path, self._version, r.prompt)
+        if hit is None:
+            return False
+        n, row, logits = hit
+        s0 = len(r.prompt)
+        if n < s0:
+            # copy the stored row: the replay loop donates its cache
+            # argument, which must not consume the cached entry
+            row = jax.tree_util.tree_map(jnp.array, row)
+            lg = None
+            for t in range(n, s0):
+                lg, row = self._extend(
+                    self.paths[path],
+                    jnp.asarray([[r.prompt[t]]], jnp.int32),
+                    row, jnp.int32(t))
+            logits = np.asarray(lg)[0]
+            self.prefix_cache.put(path, self._version, r.prompt, row,
+                                  logits)
+        slot = arena.alloc()
+        arena.write_slots(row, [slot], [s0])
+        self.in_flight[r.rid] = RequestState(
+            req=r, path=path, slot=slot,
+            tokens=list(map(int, r.prompt)),
+            next_logits=np.asarray(logits).copy(),
+            prefilled_this_tick=True, admitted_at=now,
+            version=self._version)
+        return True
 
     def _admit(self, path: int, reqs: List[Request], now: float) -> None:
         """Prefill admissions.
@@ -713,6 +802,26 @@ class ContinuousBatchingEngine(_EngineBase):
         """
         self.tel.instant("serve.admit", path=path, n=len(reqs))
         arena = self.arenas[path]
+        fresh: List[Request] = []
+        for r in reqs:
+            st = self._preempted.pop(r.rid, None)
+            if st is not None:
+                # preemption re-admission: restore the running text
+                # (prompt + tokens generated before eviction) through
+                # the §2.4.3 re-prefill primitive — greedy-identical
+                # to the uninterrupted continuation
+                slot = arena.alloc()
+                logits, cache = self._prefill_running(path, st.tokens)
+                arena.write_slots(cache, [slot], [len(st.tokens)])
+                st.path, st.slot = path, slot
+                st.next_logits = logits
+                st.prefilled_this_tick = True
+                self.in_flight[r.rid] = st
+            elif not self._prefix_admit(path, r, arena, now):
+                fresh.append(r)
+        reqs = fresh
+        if not reqs:
+            return
         if not self.bucketed:
             for r in reqs:
                 s0 = len(r.prompt)
@@ -726,6 +835,9 @@ class ContinuousBatchingEngine(_EngineBase):
                     next_logits=np.asarray(logits)[0],
                     prefilled_this_tick=True, admitted_at=now,
                     version=self._version)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.put(path, self._version, r.prompt,
+                                          cache, np.asarray(logits)[0])
             return
         groups: Dict[int, List[Request]] = {}
         for r in reqs:
@@ -750,6 +862,12 @@ class ContinuousBatchingEngine(_EngineBase):
                     next_logits=logits[i],
                     prefilled_this_tick=True, admitted_at=now,
                     version=self._version)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.put(
+                        path, self._version, r.prompt,
+                        jax.tree_util.tree_map(
+                            lambda x, i=i: x[:, i:i + 1], cache),
+                        logits[i])
 
     def _decode_tick(self) -> None:
         """Advance every in-flight request one token.
@@ -817,11 +935,13 @@ class ContinuousBatchingEngine(_EngineBase):
     def _emit_tick(self, now: float) -> List[FinishedRequest]:
         """Append one greedy token per request; retire / migrate."""
         done: List[FinishedRequest] = []
+        self._new_first = []
         for st in list(self.in_flight.values()):
             st.prefilled_this_tick = False
             st.tokens.append(int(np.argmax(st.next_logits)))
             if st.first_token_at is None:
                 st.first_token_at = now
+                self._new_first.append(st)
             if st.done:
                 self.arenas[st.path].free(st.slot)
                 fin = FinishedRequest(
@@ -830,7 +950,9 @@ class ContinuousBatchingEngine(_EngineBase):
                     arrival=st.req.arrival, admitted_at=st.admitted_at,
                     finished_at=now, first_token_at=st.first_token_at,
                     version=st.version,
-                    swapped_midstream=st.swapped_midstream)
+                    swapped_midstream=st.swapped_midstream,
+                    priority=st.req.priority,
+                    preemptions=st.preemptions)
                 done.append(fin)
                 del self.in_flight[st.req.rid]
                 self.scheduler.record_completion()
@@ -897,9 +1019,17 @@ class ContinuousBatchingEngine(_EngineBase):
                 continue
             fins = self.step(now=now)
             if realtime:
+                # re-stamp completions AND first tokens at the
+                # post-step clock: the tick's device compute belongs in
+                # TTFT, not just the pre-step submission instant
                 now = time.perf_counter() - t0
+                new_rids = {st.req.rid for st in self._new_first}
+                for st in self._new_first:
+                    st.first_token_at = now
                 for f in fins:
                     f.finished_at = now
+                    if f.rid in new_rids:
+                        f.first_token_at = now
             else:
                 now += tick_dt
             out.extend(fins)

@@ -17,8 +17,8 @@ from repro.infra import CheckpointDB, ShardedOuterExecutors
 from repro.infra.ckpt_db import load_tree, save_tree
 from repro.models.config import DiPaCoConfig
 from repro.optim.nesterov import nesterov_init
-from repro.serving import (ContinuousBatchingEngine, PathServingEngine,
-                           Request)
+from repro.serving import (ContinuousBatchingEngine, EngineOptions,
+                           PathServingEngine, Request)
 
 
 # ---------------------------------------------------------------------
@@ -232,8 +232,8 @@ def test_cross_process_pointer_refresh(plane):
     reader = DeploymentRegistry(cfg, plane["dcfg"], reg.root,
                                 key=jax.random.PRNGKey(0),
                                 base_params=plane["base"])
-    eng = ContinuousBatchingEngine(cfg, registry=reader, cache_len=48,
-                                   slots_per_path=2)
+    eng = ContinuousBatchingEngine(cfg, options=EngineOptions(
+        registry=reader, cache_len=48, slots_per_path=2))
     assert eng.version == m1.version
     # "publisher process": cut + promote a new version
     _outer_phase(plane, 0)
@@ -575,8 +575,9 @@ def test_engine_hot_swap_drain(plane):
     requests are token-identical to a fresh engine on the new params."""
     cfg, reg = plane["cfg"], plane["reg"]
     m1, m2 = _two_version_registry(plane)
-    eng = ContinuousBatchingEngine(cfg, registry=reg, cache_len=48,
-                                   slots_per_path=2, swap_policy="drain")
+    eng = ContinuousBatchingEngine(cfg, options=EngineOptions(
+        registry=reg, cache_len=48, slots_per_path=2,
+        swap_policy="drain"))
     assert eng.version == m1.version
     pa = _prompt(cfg, seed=21)
     eng.submit(Request(rid=0, prompt=pa, max_new=8))
@@ -600,14 +601,14 @@ def test_engine_hot_swap_drain(plane):
     assert eng.version == m2.version and eng.swaps == 1
     assert fins_b[0].version == m2.version
     # token-identity with a freshly constructed engine on v2
-    fresh = ContinuousBatchingEngine(cfg, registry=reg, cache_len=48,
-                                     slots_per_path=2)
+    fresh = ContinuousBatchingEngine(cfg, options=EngineOptions(
+        registry=reg, cache_len=48, slots_per_path=2))
     ref = fresh.serve_trace([Request(rid=1, prompt=pb, max_new=8)])
     np.testing.assert_array_equal(fins_b[0].tokens, ref[0].tokens)
     # A's tokens match a fresh engine pinned to v1 (it finished there)
     reg.rollback()
-    fresh1 = ContinuousBatchingEngine(cfg, registry=reg, cache_len=48,
-                                      slots_per_path=2)
+    fresh1 = ContinuousBatchingEngine(cfg, options=EngineOptions(
+        registry=reg, cache_len=48, slots_per_path=2))
     ref1 = fresh1.serve_trace([Request(rid=0, prompt=pa, max_new=8)])
     np.testing.assert_array_equal(fins[0].tokens, ref1[0].tokens)
 
@@ -618,8 +619,9 @@ def test_engine_hot_swap_live_flags_divergence(plane):
     flagged; admissions never pause."""
     cfg, reg = plane["cfg"], plane["reg"]
     m1, m2 = _two_version_registry(plane)
-    eng = ContinuousBatchingEngine(cfg, registry=reg, cache_len=48,
-                                   slots_per_path=2, swap_policy="live")
+    eng = ContinuousBatchingEngine(cfg, options=EngineOptions(
+        registry=reg, cache_len=48, slots_per_path=2,
+        swap_policy="live"))
     pa = _prompt(cfg, seed=31)
     eng.submit(Request(rid=0, prompt=pa, max_new=8))
     eng.step()
@@ -638,8 +640,8 @@ def test_engine_hot_swap_live_flags_divergence(plane):
     assert not out[1].swapped_midstream and out[1].version == m2.version
     # the mid-stream request really diverged from an uninterrupted v1 run
     reg.rollback()
-    fresh1 = ContinuousBatchingEngine(cfg, registry=reg, cache_len=48,
-                                      slots_per_path=2)
+    fresh1 = ContinuousBatchingEngine(cfg, options=EngineOptions(
+        registry=reg, cache_len=48, slots_per_path=2))
     ref1 = fresh1.serve_trace([Request(rid=0, prompt=pa, max_new=8)])
     assert not np.array_equal(out[0].tokens, ref1[0].tokens)
 
@@ -647,14 +649,16 @@ def test_engine_hot_swap_live_flags_divergence(plane):
 def test_oneshot_engine_polls_registry(plane):
     cfg, reg = plane["cfg"], plane["reg"]
     m1, m2 = _two_version_registry(plane)
-    eng = PathServingEngine(cfg, registry=reg, cache_len=48)
+    eng = PathServingEngine(cfg, options=EngineOptions(registry=reg,
+                                                       cache_len=48))
     prompts = _prompt(cfg, seed=41)[None]
     r1 = eng.generate(prompts, max_new=6)
     assert eng.version == m1.version
     reg.promote(m2.version)
     r2 = eng.generate(prompts, max_new=6)
     assert eng.version == m2.version
-    fresh = PathServingEngine(cfg, registry=reg, cache_len=48)
+    fresh = PathServingEngine(cfg, options=EngineOptions(registry=reg,
+                                                         cache_len=48))
     ref = fresh.generate(prompts, max_new=6)
     np.testing.assert_array_equal(r2.tokens, ref.tokens)
     assert not np.array_equal(r1.tokens, r2.tokens)
@@ -663,18 +667,20 @@ def test_oneshot_engine_polls_registry(plane):
 def test_engine_rejects_both_paths_and_registry(plane, tiny_base):
     cfg, reg = plane["cfg"], plane["reg"]
     with pytest.raises(ValueError, match="not both"):
-        ContinuousBatchingEngine(cfg, [tiny_base[0]], registry=reg)
+        ContinuousBatchingEngine(cfg, [tiny_base[0]],
+                                 options=EngineOptions(registry=reg))
     with pytest.raises(ValueError, match="swap_policy"):
-        ContinuousBatchingEngine(cfg, [tiny_base[0]], swap_policy="x")
+        EngineOptions(swap_policy="x")
     with pytest.raises(ValueError, match="required"):
         ContinuousBatchingEngine(cfg)
-    with pytest.raises(RuntimeError, match="promote"):
-        ContinuousBatchingEngine(cfg, registry=reg)  # nothing promoted
+    with pytest.raises(RuntimeError, match="promote"):  # nothing promoted
+        ContinuousBatchingEngine(cfg, options=EngineOptions(registry=reg))
 
 
 def test_ttft_recorded(tiny_cfg, tiny_base):
-    eng = ContinuousBatchingEngine(tiny_cfg, [tiny_base[0]], cache_len=48,
-                                   slots_per_path=2)
+    eng = ContinuousBatchingEngine(tiny_cfg, [tiny_base[0]],
+                                   options=EngineOptions(
+                                       cache_len=48, slots_per_path=2))
     trace = [Request(rid=i, prompt=_prompt(tiny_cfg, seed=50 + i),
                      max_new=6, arrival=0.01 * i) for i in range(4)]
     fins = eng.serve_trace(trace, tick_dt=1e-3)
@@ -716,8 +722,9 @@ def test_train_and_serve_acceptance(tiny_cfg, tiny_docs, tiny_base,
     gate = CanaryGate(cfg, shadow, ppl_ratio_tol=2.0, min_agreement=0.0)
     pub = Publisher(svc.db, reg, gate=gate)
     pub.bootstrap()
-    eng = ContinuousBatchingEngine(cfg, registry=reg, cache_len=48,
-                                   slots_per_path=2, swap_policy="drain")
+    eng = ContinuousBatchingEngine(cfg, options=EngineOptions(
+        registry=reg, cache_len=48, slots_per_path=2,
+        swap_policy="drain"))
     v1 = eng.version
     prompt = _prompt(cfg, seed=61)
 
@@ -733,8 +740,8 @@ def test_train_and_serve_acceptance(tiny_cfg, tiny_docs, tiny_base,
     fins2 = eng.serve_trace([Request(rid=1, prompt=prompt, max_new=6)])
     assert eng.version == out["promoted"] and eng.swaps == 1
     assert fins2[0].version == out["promoted"]
-    fresh = ContinuousBatchingEngine(cfg, registry=reg, cache_len=48,
-                                     slots_per_path=2)
+    fresh = ContinuousBatchingEngine(cfg, options=EngineOptions(
+        registry=reg, cache_len=48, slots_per_path=2))
     ref = fresh.serve_trace([Request(rid=1, prompt=prompt, max_new=6)])
     np.testing.assert_array_equal(fins2[0].tokens, ref[0].tokens)
     # rollback restores the prior version bit-exactly

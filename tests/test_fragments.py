@@ -2,6 +2,7 @@
 partition + wire quantization core, per-fragment executor windows,
 fragment-complete publisher gating, and the service-level regression
 that the defaults stay bit-identical to unfragmented DiLoCo."""
+import os
 import tempfile
 
 import jax
@@ -332,8 +333,11 @@ def test_executor_fragment_rows_and_restore(tiny_cfg, tiny_base, tmp_path):
     rows = db.rows(kind="module")
     ex = execs.execs[(0, 0)]
     mine = [r for r in rows if (r.level, r.expert) == (0, 0)]
-    assert sorted(r.fragment for r in mine) == \
+    slices = [r for r in mine if not r.extra.get("full")]
+    assert sorted(r.fragment for r in slices) == \
         list(range(ex.spec.num_fragments))
+    # exactly one params-only full row for the completed phase
+    assert [r.fragment for r in mine if r.extra.get("full")] == [-1]
     assert all(r.extra["num_fragments"] == ex.spec.num_fragments
                for r in mine)
     # partial second phase: only worker 0's fragment 0 so far
@@ -350,6 +354,85 @@ def test_executor_fragment_rows_and_restore(tiny_cfg, tiny_base, tmp_path):
             for i in w.indices:
                 np.testing.assert_array_equal(np.asarray(w.mom[i]),
                                               np.asarray(w2.mom[i]))
+    for p in range(4):
+        for a, b in zip(jax.tree_util.tree_leaves(store.assemble(p)),
+                        jax.tree_util.tree_leaves(store2.assemble(p))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_slice_rows_cut_write_amplification(tiny_cfg, tiny_base, tmp_path):
+    """With K fragments every apply used to persist the classic full
+    row (params + momentum): K·(P+M) bytes per module phase.  Slice
+    rows bring that to the K disjoint slices (P+M total) plus one
+    params-only full row — (P+M) + P.  For K=4 and M ≈ P the analytic
+    saving is 4·2P / 3P ≈ 2.7×; gate conservatively at 2× (container
+    metadata and the momentum/param byte split add noise)."""
+    dbs = {}
+    for k in (1, 4):
+        db = CheckpointDB(str(tmp_path / f"k{k}"))
+        store, part, base = _store(tiny_cfg, tiny_base)
+        execs = ShardedOuterExecutors(store, part, np.arange(4),
+                                      fragments=k, ckpt_db=db)
+        for p in range(2):
+            for w in range(4):
+                execs.accumulate(w, _delta(base, 0.01 * (w + p + 1)),
+                                 phase=p)
+        dbs[k] = db
+
+    def phase_bytes(db, p):
+        return sum(os.path.getsize(r.file)
+                   for r in db.rows(kind="module") if r.phase == p)
+
+    for p in range(2):
+        full = phase_bytes(dbs[1], p)        # one (P+M) row per module
+        legacy_k4 = 4 * full                 # pre-fix K=4 write cost
+        actual_k4 = phase_bytes(dbs[4], p)
+        assert actual_k4 < 2.0 * full        # ≈ (P+M) + P, not 4·(P+M)
+        assert legacy_k4 / actual_k4 >= 2.0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("comm_dtype", ["fp32", "int8", "int4"])
+def test_kill_resume_across_fragment_boundary(tiny_cfg, tiny_base,
+                                              tmp_path, comm_dtype):
+    """Kill between fragment applies of a phase — fragment 0 of phase 1
+    applied and persisted, fragment 1 still pending — then restore a
+    fresh executor set from the rows.  Window phases, momentum and
+    assembled params must come back bit-exact, and finishing the
+    interrupted phase plus one more phase on both the survivor and the
+    resumed set must stay bit-identical, with deltas that passed
+    through the int8/int4 wire included."""
+    db = CheckpointDB(str(tmp_path))
+    store, part, base = _store(tiny_cfg, tiny_base)
+    live = ShardedOuterExecutors(store, part, np.arange(4), fragments=2,
+                                 ckpt_db=db)
+
+    def wire(v):
+        return fake_quantize(_delta(base, v), comm_dtype)
+
+    for w in range(4):                       # phase 0: fragment-complete
+        live.accumulate(w, wire(0.01 * (w + 1)), phase=0)
+    for w in range(4):                       # phase 1: fragment 0 only
+        live.accumulate(w, wire(0.02 * (w + 1)), phase=1, fragment=0)
+    # "kill": the process dies here; a fresh set resumes from the rows
+    store2, _, _ = _store(tiny_cfg, tiny_base)
+    resumed = ShardedOuterExecutors(store2, part, np.arange(4),
+                                    fragments=2, ckpt_db=None)
+    resumed.restore_from_db(db)
+    for k, ex in live._all().items():
+        ex2 = resumed._all()[k]
+        assert [w.phase for w in ex2.windows] == \
+            [w.phase for w in ex.windows]
+        for w, w2 in zip(ex.windows, ex2.windows):
+            for i in w.indices:
+                np.testing.assert_array_equal(np.asarray(w.mom[i]),
+                                              np.asarray(w2.mom[i]))
+    # finish phase 1 and run phase 2 on both sets: bit-identical
+    for execs in (live, resumed):
+        for w in range(4):
+            execs.accumulate(w, wire(0.02 * (w + 1)), phase=1, fragment=1)
+        for w in range(4):
+            execs.accumulate(w, wire(0.03 * (w + 1)), phase=2)
     for p in range(4):
         for a, b in zip(jax.tree_util.tree_leaves(store.assemble(p)),
                         jax.tree_util.tree_leaves(store2.assemble(p))):
@@ -396,12 +479,11 @@ def test_publisher_waits_for_fragment_complete_phase(tiny_cfg, tiny_base,
 def test_publisher_resume_uses_cut_phase_not_ref_phases(tiny_cfg,
                                                        tiny_base,
                                                        tmp_path):
-    """With staggered fragments the newest row per module can be a
-    phase-(t+1) fragment apply at the moment phase t completes, so the
-    manifest's refs record phases *ahead* of the cut.  A restarted
-    publisher must resume from the manifest's recorded ``cut_phase`` —
-    min-over-ref-phases would overshoot and silently skip publishing
-    phase t+1."""
+    """A restarted publisher must resume from the manifest's recorded
+    ``cut_phase``.  (Since the slice-row fix, K>1 manifest payloads are
+    the params-only full rows written exactly at phase completion, so
+    refs can no longer run ahead of the cut — asserted below — but the
+    recorded cut_phase remains the restart-resume source of truth.)"""
     from repro.deploy import DeploymentRegistry, Publisher
     base, axes = tiny_base
     dcfg = DiPaCoConfig(levels=(2, 2), outer_fragments=2)
@@ -425,7 +507,8 @@ def test_publisher_resume_uses_cut_phase_not_ref_phases(tiny_cfg,
     assert pub.completed_phase() == 0
     m = pub.poll()
     assert m is not None and m.cut_phase == 0
-    assert min(r.phase for r in m.refs) > 0      # refs ran ahead
+    # refs are the phase-complete full rows: exactly the cut phase
+    assert {r.phase for r in m.refs} == {0}
     reg.promote(m.version)                       # published before the kill
     pub.close()
     # publisher restart: must pick up at the cut phase (min-over-refs
@@ -508,7 +591,7 @@ def test_service_streaming_staggered_overlap_and_quantization(
             m = svc.run(3, tau=2)
             assert svc.pending_fragments == []   # run() is a sync point
             qres = {r.path_id for r in svc.db.rows(kind="qres")}
-            stats[name] = (m, dict(svc.comm_stats), qres)
+            stats[name] = (m, dict(m["comm"]), qres)
             svc.shutdown()
     mb, cb, qb = stats["burst"]
     ms, cs, qs = stats["stream"]

@@ -87,6 +87,8 @@ def test_expert_gemm(e, c, d, f, dtype):
     (128, 4, 2, 32, True, None),
     (96, 2, 1, 64, True, 24),
     (64, 4, 4, 32, False, None),
+    (80, 2, 2, 32, True, None),     # ragged tail: s not a block multiple
+    (64, 4, 2, 32, False, 16),      # non-causal sliding window + GQA
 ])
 def test_flash_attention_backward(s, h, kh, d, causal, window):
     """custom_vjp Pallas backward vs autodiff of the full oracle."""

@@ -1,0 +1,130 @@
+"""Launcher coverage: the AOT dry-run's pure decision helpers
+(``opt_transform`` / ``_supports``), an end-to-end ``run_case``
+compile in a subprocess (the module pins the XLA host device count at
+import, so it cannot share this process's jax), and the serve
+launcher's argument-validation paths."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+# ---------------------------------------------------------------------
+# pure decision helpers — importable here because the XLA flag the
+# module sets at import only takes effect at first jax init
+# ---------------------------------------------------------------------
+
+def _dryrun():
+    from repro.launch import dryrun
+    return dryrun
+
+
+def test_opt_transform_sets_perf_flags_per_family():
+    from repro.configs import ASSIGNED_ARCHS, get_config
+    dr = _dryrun()
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        opt = dr.opt_transform(cfg)
+        assert opt.causal_skip and opt.remat_policy == "dots"
+        # decode-memory knob splits on encoder presence
+        if cfg.encoder is not None:
+            assert opt.cross_kv_cache and not opt.kv_quant
+        else:
+            assert opt.kv_quant
+        # island-internal DP only below the TP crossover, never for SSM
+        want_dp = cfg.d_model <= 2048 and cfg.arch_type != "ssm"
+        assert (opt.island_parallelism == "data") == want_dp
+        # the transform must not mutate the registry's config
+        assert not cfg.causal_skip
+
+
+def test_supports_long_context_notes_sliding_window():
+    from repro.configs import get_config
+    from repro.models.config import INPUT_SHAPES
+    dr = _dryrun()
+    long = INPUT_SHAPES["long_500k"]
+    train = INPUT_SHAPES["train_4k"]
+    ok, note = dr._supports(get_config("qwen3-8b"), long)
+    assert ok and note == "sliding_window"
+    for native in ("mamba2-1.3b", "jamba-v0.1-52b"):
+        ok, note = dr._supports(get_config(native), long)
+        assert ok and note == ""
+    ok, note = dr._supports(get_config("qwen3-8b"), train)
+    assert ok and note == ""
+
+
+# ---------------------------------------------------------------------
+# run_case end-to-end (AOT lower + compile + roofline) in a subprocess
+# ---------------------------------------------------------------------
+
+_RUN_CASE = r"""
+import os, json, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.configs import get_smoke_config
+from repro.launch import dryrun
+from repro.models.config import INPUT_SHAPES, InputShape
+
+INPUT_SHAPES["smoke_train"] = InputShape("smoke_train", 256, 8, "train")
+dryrun.get_config = get_smoke_config            # smoke-size the archs
+dryrun.make_production_mesh = (                 # 8 fake host devices
+    lambda multi_pod=False: jax.make_mesh((4, 2), ("data", "model")))
+recs = [dryrun.run_case("dipaco-150m", "smoke_train", multi_pod=False,
+                        verbose=False, variant=v)
+        for v in ("base", "opt")]
+print(json.dumps(recs))
+"""
+
+
+@pytest.mark.slow
+def test_run_case_compiles_and_rooflines_smoke_arch():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _RUN_CASE], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    base, opt = json.loads(out.stdout.strip().splitlines()[-1])
+    for rec in (base, opt):
+        assert rec["ok"], rec.get("error")
+        assert rec["total_flops"] > 0 and rec["total_bytes"] > 0
+        assert 0 < rec["useful_flops_ratio"] <= 1
+        assert rec["roofline"]["bound_s"] > 0
+        assert rec["collectives"]["total_bytes"] >= 0
+    # causal chunk skipping strictly raises the useful-FLOPs ratio
+    assert opt["useful_flops_ratio"] > base["useful_flops_ratio"]
+
+
+# ---------------------------------------------------------------------
+# serve launcher argument validation
+# ---------------------------------------------------------------------
+
+def test_serve_fleet_requires_deploy_root(monkeypatch, capsys):
+    from repro.launch import serve
+    monkeypatch.setattr(sys, "argv", [
+        "serve", "--fleet", "2", "--paths", "1", "--requests", "1"])
+    with pytest.raises(SystemExit):
+        serve.main()
+    assert "--fleet requires --deploy-root" in capsys.readouterr().err
+
+
+def test_serve_rejects_unknown_engine(monkeypatch, capsys):
+    from repro.launch import serve
+    monkeypatch.setattr(sys, "argv", ["serve", "--engine", "warp"])
+    with pytest.raises(SystemExit):
+        serve.main()
+    assert "invalid choice" in capsys.readouterr().err
+
+
+@pytest.mark.slow
+def test_serve_oneshot_end_to_end(monkeypatch, capsys):
+    from repro.launch import serve
+    monkeypatch.setattr(sys, "argv", [
+        "serve", "--paths", "2", "--requests", "2", "--prompt-len", "8",
+        "--max-new", "2"])
+    serve.main()
+    out = capsys.readouterr().out
+    assert "tok/s" in out and "request->path" in out

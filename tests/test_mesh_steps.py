@@ -326,24 +326,25 @@ def test_engine_options_validation():
         EngineOptions(reroute_every=-1)
     with pytest.raises(ValueError, match="prefill_buckets"):
         EngineOptions(cache_len=64, prefill_buckets=(16, 128))
+    with pytest.raises(ValueError, match="prefix_cache"):
+        EngineOptions(prefix_cache=-1)
     # normalizes to a tuple
     assert EngineOptions(prefill_buckets=[16, 32]).prefill_buckets \
         == (16, 32)
 
 
-def test_engine_options_shim(tiny_cfg, tiny_base):
+def test_engine_options_shim_removed(tiny_cfg, tiny_base):
+    """The PR-6 loose-kwarg construction shim has expired: engines take
+    options=EngineOptions(...) only, and any stray keyword argument
+    fails loudly with the replacement spelled out."""
     from repro.serving import EngineOptions, PathServingEngine
     base, _ = tiny_base
-    # new style: no warning, options recorded
     opts = EngineOptions(cache_len=32)
     eng = PathServingEngine(tiny_cfg, [base], options=opts)
     assert eng.cache_len == 32 and eng.options is opts
-    # legacy kwargs still work for this release, but warn
-    with pytest.warns(DeprecationWarning, match="EngineOptions"):
-        eng = PathServingEngine(tiny_cfg, [base], cache_len=32)
-    assert eng.cache_len == 32
-    # mixing both forms is an error, as is an unknown / wrong-engine kwarg
-    with pytest.raises(ValueError, match="not both"):
+    with pytest.raises(TypeError, match="EngineOptions"):
+        PathServingEngine(tiny_cfg, [base], cache_len=32)
+    with pytest.raises(TypeError, match="cache_len"):
         PathServingEngine(tiny_cfg, [base], options=opts, cache_len=16)
     with pytest.raises(TypeError, match="slots_per_path"):
         PathServingEngine(tiny_cfg, [base], slots_per_path=2)

@@ -233,12 +233,14 @@ def test_comm_stats_shim_and_retry_bytes(tiny_cfg, tiny_docs, tiny_base):
                                   "sends", "retry_bytes"}
         assert m["comm"]["sends"] > 0
         assert m["metrics"]["train.comm.send_bytes.count"] > 0
-        with pytest.warns(DeprecationWarning):
-            legacy = svc.comm_stats
-        assert legacy == m["comm"] or legacy["sends"] >= m["comm"]["sends"]
+        # the PR-9 deprecation shim has expired: the property now fails
+        # loudly with a pointer to the replacements
+        with pytest.raises(AttributeError, match="reset_comm_stats"):
+            svc.comm_stats
         svc.reset_comm_stats()
-        with pytest.warns(DeprecationWarning):
-            assert svc.comm_stats["sends"] == 0
+        snap = svc.metrics.snapshot("train.comm.send_bytes")
+        vals = snap.get("train.comm.send_bytes", {}).get("values", {})
+        assert vals.get("", {"count": 0})["count"] == 0
         svc.shutdown()
 
 

@@ -7,8 +7,9 @@ import numpy as np
 import pytest
 
 from repro.models import api
-from repro.serving import (ContinuousBatchingEngine, PathServingEngine,
-                           Request, SlotArena, SlotExhausted, poisson_trace)
+from repro.serving import (ContinuousBatchingEngine, EngineOptions,
+                           PathServingEngine, Request, SlotArena,
+                           SlotExhausted, poisson_trace)
 
 
 @pytest.fixture(scope="module")
@@ -74,8 +75,8 @@ def test_slot_arena_write_roundtrip(cfg):
 def test_admission_backpressure_order(cfg, two_paths):
     """With a single slot, requests are served FIFO, one at a time."""
     prompts = _prompts(cfg, [8, 8, 8], seed=40)
-    eng = ContinuousBatchingEngine(cfg, two_paths, cache_len=32,
-                                   slots_per_path=1)
+    eng = ContinuousBatchingEngine(cfg, two_paths, options=EngineOptions(
+        cache_len=32, slots_per_path=1))
     trace = [Request(rid=i, prompt=prompts[i], max_new=4) for i in range(3)]
     fins = eng.serve_trace(trace)
     assert [f.rid for f in fins] == [0, 1, 2]
@@ -83,8 +84,8 @@ def test_admission_backpressure_order(cfg, two_paths):
 
 
 def test_submit_validates_capacity(cfg, two_paths):
-    eng = ContinuousBatchingEngine(cfg, two_paths, cache_len=16,
-                                   slots_per_path=1)
+    eng = ContinuousBatchingEngine(cfg, two_paths, options=EngineOptions(
+        cache_len=16, slots_per_path=1))
     with pytest.raises(ValueError):
         eng.submit(Request(rid=0, prompt=np.zeros(10, np.int32), max_new=8))
 
@@ -116,9 +117,9 @@ _ENGINE_MATRIX = [
 def _serve_matrix_engine(cfg, two_paths, prompts, *, attn_impl, stacked,
                          bucketed, kv_quant, slots=2):
     ecfg = cfg.replace(attn_impl=attn_impl, kv_quant=kv_quant)
-    eng = ContinuousBatchingEngine(ecfg, two_paths, cache_len=48,
-                                   slots_per_path=slots, stacked=stacked,
-                                   bucketed_prefill=bucketed)
+    eng = ContinuousBatchingEngine(ecfg, two_paths, options=EngineOptions(
+        cache_len=48, slots_per_path=slots, stacked=stacked,
+        bucketed_prefill=bucketed))
     trace = [Request(rid=i, prompt=prompts[i], max_new=6)
              for i in range(len(_EQ_LENS))]
     fins = {f.rid: f for f in eng.serve_trace(trace)}
@@ -138,7 +139,8 @@ def matrix_refs(cfg, two_paths):
     flip argmax ties, so these checks would have to become top-k
     agreement instead."""
     prompts = _prompts(cfg, _EQ_LENS, seed=33)
-    old = PathServingEngine(cfg, two_paths, cache_len=48)
+    old = PathServingEngine(cfg, two_paths,
+                            options=EngineOptions(cache_len=48))
     fp32 = {}
     for ln in sorted(set(_EQ_LENS)):
         idx = [i for i, l in enumerate(_EQ_LENS) if l == ln]
@@ -184,12 +186,12 @@ def test_stacked_reroute_migration(cfg, two_paths):
     """§2.4.3 migration lands in the stacked arena of the target island
     and keeps decoding there (stacked + bucketed engine)."""
     prompt = _prompts(cfg, [16], seed=5)[0]
-    old = PathServingEngine(cfg, two_paths, router=ScriptedRouter(),
-                            feat_params=two_paths[0], cache_len=64)
+    old = PathServingEngine(cfg, two_paths, options=EngineOptions(
+        router=ScriptedRouter(), feat_params=two_paths[0], cache_len=64))
     ref = old.generate(prompt[None], max_new=12, reroute_every=4)
-    eng = ContinuousBatchingEngine(
-        cfg, two_paths, router=ScriptedRouter(), feat_params=two_paths[0],
-        cache_len=64, slots_per_path=2, reroute_every=4, stacked=True)
+    eng = ContinuousBatchingEngine(cfg, two_paths, options=EngineOptions(
+        router=ScriptedRouter(), feat_params=two_paths[0],
+        cache_len=64, slots_per_path=2, reroute_every=4, stacked=True))
     fins = eng.serve_trace([Request(rid=0, prompt=prompt, max_new=12)])
     np.testing.assert_array_equal(fins[0].tokens, ref.tokens[0])
     assert fins[0].switches == ref.switches
@@ -202,18 +204,18 @@ def test_heterogeneous_paths_fall_back_to_loop(cfg, two_paths):
     cfg_small = cfg.replace(d_ff=256)
     p_other, _ = api.init_model(jax.random.PRNGKey(9), cfg_small)
     mixed = [two_paths[0], p_other]
-    eng = ContinuousBatchingEngine(cfg, mixed, cache_len=32,
-                                   slots_per_path=2)
+    eng = ContinuousBatchingEngine(cfg, mixed, options=EngineOptions(
+        cache_len=32, slots_per_path=2))
     assert not eng.stacked
     with pytest.raises(ValueError, match="homogeneous"):
-        ContinuousBatchingEngine(cfg, mixed, cache_len=32,
-                                 slots_per_path=2, stacked=True)
+        ContinuousBatchingEngine(cfg, mixed, options=EngineOptions(
+            cache_len=32, slots_per_path=2, stacked=True))
     with pytest.raises(ValueError, match="attention-only"):
         from repro.configs import get_smoke_config
         mcfg = get_smoke_config("mamba2-1.3b")
         mp, _ = api.init_model(jax.random.PRNGKey(10), mcfg)
-        ContinuousBatchingEngine(mcfg, [mp], cache_len=32,
-                                 slots_per_path=2, bucketed_prefill=True)
+        ContinuousBatchingEngine(mcfg, [mp], options=EngineOptions(
+            cache_len=32, slots_per_path=2, bucketed_prefill=True))
 
 
 def test_mamba_paths_disable_bucketing_automatically():
@@ -222,8 +224,8 @@ def test_mamba_paths_disable_bucketing_automatically():
     from repro.configs import get_smoke_config
     mcfg = get_smoke_config("mamba2-1.3b").replace(route_prefix_len=8)
     mp, _ = api.init_model(jax.random.PRNGKey(11), mcfg)
-    eng = ContinuousBatchingEngine(mcfg, [mp], cache_len=32,
-                                   slots_per_path=2)
+    eng = ContinuousBatchingEngine(mcfg, [mp], options=EngineOptions(
+        cache_len=32, slots_per_path=2))
     assert not eng.bucketed and eng.stacked
     prompts = _prompts(mcfg, [8, 10], seed=50)
     fins = eng.serve_trace([Request(rid=i, prompt=prompts[i], max_new=4)
@@ -252,14 +254,14 @@ def test_reroute_migration_matches_oneshot(cfg, two_paths):
     """Forced path switches: the migrated slot must reproduce the old
     engine's full re-prefill token-for-token."""
     prompt = _prompts(cfg, [16], seed=5)[0]
-    old = PathServingEngine(cfg, two_paths, router=ScriptedRouter(),
-                            feat_params=two_paths[0], cache_len=64)
+    old = PathServingEngine(cfg, two_paths, options=EngineOptions(
+        router=ScriptedRouter(), feat_params=two_paths[0], cache_len=64))
     ref = old.generate(prompt[None], max_new=12, reroute_every=4)
     assert ref.switches > 0
 
-    eng = ContinuousBatchingEngine(
-        cfg, two_paths, router=ScriptedRouter(), feat_params=two_paths[0],
-        cache_len=64, slots_per_path=2, reroute_every=4)
+    eng = ContinuousBatchingEngine(cfg, two_paths, options=EngineOptions(
+        router=ScriptedRouter(), feat_params=two_paths[0],
+        cache_len=64, slots_per_path=2, reroute_every=4))
     fins = eng.serve_trace([Request(rid=0, prompt=prompt, max_new=12)])
     assert len(fins) == 1
     np.testing.assert_array_equal(fins[0].tokens, ref.tokens[0])
@@ -286,10 +288,9 @@ def test_migration_deferred_when_target_full(cfg, two_paths):
                 return np.zeros(z.shape[0], np.int32)
             return super().assign(z)
 
-    eng = ContinuousBatchingEngine(
-        cfg, two_paths, router=Admit0ThenOther(),
-        feat_params=two_paths[0], cache_len=64, slots_per_path=1,
-        reroute_every=4)
+    eng = ContinuousBatchingEngine(cfg, two_paths, options=EngineOptions(
+        router=Admit0ThenOther(), feat_params=two_paths[0], cache_len=64,
+        slots_per_path=1, reroute_every=4))
     # occupy path 1's only slot so migration has nowhere to go
     eng.arenas[1].alloc()
     prompt = _prompts(cfg, [16], seed=6)[0]

@@ -105,8 +105,9 @@ def test_flat_moe_config_is_fully_independent(tiny_cfg):
 
 def test_serving_engine_generates(tiny_cfg, setup):
     corpus, docs, doms, val, _, base = setup
-    from repro.serving import PathServingEngine
-    eng = PathServingEngine(tiny_cfg, [base, base], cache_len=64)
+    from repro.serving import EngineOptions, PathServingEngine
+    eng = PathServingEngine(tiny_cfg, [base, base],
+                            options=EngineOptions(cache_len=64))
     res = eng.generate(val[:2, :16], max_new=8)
     assert res.tokens.shape == (2, 24)
     assert (res.tokens[:, :16] == val[:2, :16]).all()
